@@ -1,0 +1,29 @@
+"""Shared helpers for the benchmark harness. Every bench module exposes
+run() -> list[(name, us_per_call, derived)] rows; benchmarks.run prints the
+combined CSV. Simulated-cycle benches report cycles/1000 as us_per_call
+(1 GHz clock, paper §IV timing)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (jax: blocks on result)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def cycles_to_us(cycles: float, f_ghz: float = 1.0) -> float:
+    return cycles / (f_ghz * 1e3)

@@ -1,0 +1,29 @@
+"""Paper Fig. 1: contribution of each part to one DistilBERT layer's
+computation — establishes that the linear-projection + feed-forward matmuls
+AxLLM targets dominate the layer."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, cycles_to_us
+
+
+def run() -> list:
+    d, dff, seq, heads = 768, 3072, 236, 12
+    hd = d // heads
+    # multiplies per token
+    parts = {
+        "linear_projection_qkvo": 4 * d * d,
+        "feed_forward": 2 * d * dff,
+        "attention_scores": 2 * seq * d,      # QK^T + PV per token avg
+        "softmax_other": 5 * heads * seq,     # exp/sum/scale estimate
+    }
+    total = sum(parts.values())
+    rows: list = []
+    covered = (parts["linear_projection_qkvo"] + parts["feed_forward"]) \
+        / total
+    for name, ops in parts.items():
+        rows.append((f"fig1/{name}", cycles_to_us(ops * seq / 64),
+                     f"share={ops / total:.3f}"))
+    rows.append(("fig1/axllm_target_share", 0.0,
+                 f"target_share={covered:.3f} (paper: dominant)"))
+    return rows

@@ -1,0 +1,59 @@
+"""Kernel-level microbench on the XLA fallback path (CPU container; the
+Pallas kernels target TPU and are validated in interpret mode). Measures the
+byte-traffic effect of the AxLLM representation: int8-code matmul vs bf16
+matmul wall time + the derived HBM-byte ratio the TPU roofline uses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core.quantization import QuantConfig, quantize
+from repro.kernels import ops
+
+
+def run() -> list:
+    rows: list = []
+    rng = np.random.default_rng(0)
+    m, k, n = 8, 4096, 4096          # decode-like skinny matmul
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    qt8 = quantize(w, QuantConfig(8, "affine", "per_channel"))
+    qt4 = quantize(w, QuantConfig(4, "affine", "per_channel", pack=True))
+
+    f_fp = jax.jit(lambda a, b: a @ b)
+    f_q8 = jax.jit(lambda a, q: ops.axllm_matmul(a, q, impl="ref"))
+
+    t_fp = timeit(f_fp, x, w)
+    t_q8 = timeit(f_q8, x, qt8)
+    t_q4 = timeit(f_q8, x, qt4)
+    bytes_fp = k * n * 4
+    bytes_q8 = k * n + n * 4
+    bytes_q4 = k * n // 2 + n * 4
+    rows.append(("kernel/matmul_f32", t_fp, f"weight_bytes={bytes_fp}"))
+    rows.append(("kernel/matmul_axllm_int8", t_q8,
+                 f"weight_bytes={bytes_q8} ({bytes_fp/bytes_q8:.1f}x less)"))
+    rows.append(("kernel/matmul_axllm_int4", t_q4,
+                 f"weight_bytes={bytes_q4} ({bytes_fp/bytes_q4:.1f}x less)"))
+
+    # decode attention: bf16 KV vs int8 KV (bytes halve)
+    b, s, h, hk, d = 4, 8192, 8, 2, 128
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, s, hk, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, s, hk, d)), jnp.float32)
+    sc = jnp.maximum(jnp.abs(kc).max(-1, keepdims=True), 1e-8) / 127
+    kq = jnp.clip(jnp.round(kc / sc), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(vc / sc), -127, 127).astype(jnp.int8)
+    length = jnp.full((b,), s, jnp.int32)
+    f_fp = jax.jit(lambda *a: ops.decode_attention(*a, impl="ref"))
+    f_q = jax.jit(lambda q_, k_, v_, l_, ks_, vs_: ops.decode_attention(
+        q_, k_, v_, l_, k_scale=ks_, v_scale=vs_, impl="ref"))
+    t1 = timeit(f_fp, q, kc, vc, length)
+    t2 = timeit(f_q, q, kq, vq, length, sc, sc)
+    rows.append(("kernel/decode_attn_f32kv", t1,
+                 f"kv_bytes={2*b*s*hk*d*4}"))
+    rows.append(("kernel/decode_attn_int8kv", t2,
+                 f"kv_bytes={2*b*s*hk*(d+4)} (≈4x less than f32)"))
+    return rows

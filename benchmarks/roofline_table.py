@@ -1,0 +1,91 @@
+"""Roofline summary rows from the dry-run JSON records (results/dryrun/):
+per (arch x shape) — the three terms, dominant bottleneck, MODEL_FLOPS
+ratio. Requires launch/dryrun.py to have populated the cache; rows are
+omitted (not failed) for cells not yet run so benchmarks.run works at any
+sweep stage."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+from repro.roofline import analysis as ra
+
+
+def _load(results_dir="results/dryrun"):
+    recs = {}
+    for f in glob.glob(os.path.join(results_dir, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        recs[(r["cell"], r["mesh"], r.get("variant", "axllm-int8"))] = r
+    return recs
+
+
+def corrected_totals(rec):
+    """Apply the 1/2-group delta extrapolation (per-device -> global)."""
+    aux = rec.get("aux")
+    chips = rec["chips"]
+    if not aux:
+        return None
+    ng = aux["n_groups"]
+    out = {}
+    for key, src in (("flops", "flops"), ("bytes", "bytes"),
+                     ("coll", "collective_bytes")):
+        c1, c2 = aux["g1"][src], aux["g2"][src]
+        if c1 is None or c2 is None:
+            return None
+        out[key] = ra.extrapolate(c1, c2, ng)
+    # train aux runs used a reduced batch; scale to the full global batch
+    cell_shape = rec["cell"].split(":")[1]
+    spec = SHAPES[cell_shape]
+    if spec.kind == "train":
+        scale = spec.global_batch / aux["g1"]["aux_batch"]
+        for k in out:
+            out[k] *= scale
+    out["flops_global"] = out["flops"] * chips
+    out["bytes_global"] = out["bytes"] * chips
+    out["coll_global"] = out["coll"] * chips
+    return out
+
+
+def run() -> list:
+    rows: list = []
+    recs = _load()
+    for (cell, mesh, variant), rec in sorted(recs.items()):
+        if mesh != "pod16x16" or variant != "axllm-int8":
+            continue
+        if rec["status"] == "skipped":
+            rows.append((f"roofline/{cell}", 0.0, "SKIP: " + rec["reason"][:60]))
+            continue
+        if rec["status"] != "ok":
+            rows.append((f"roofline/{cell}", 0.0, "ERROR"))
+            continue
+        arch, shape = cell.split(":")
+        cfg = get_config(arch)
+        spec = SHAPES[shape]
+        corr = corrected_totals(rec)
+        if corr is None:
+            # fall back to raw per-device cost (scan-undercounted; flagged)
+            flops_g = (rec["cost_analysis"].get("flops") or 0) * rec["chips"]
+            bytes_g = (rec["cost_analysis"].get("bytes accessed") or 0) \
+                * rec["chips"]
+            coll_g = rec["collective_bytes"] * rec["chips"]
+            tag = "RAW(scan-undercount)"
+        else:
+            flops_g, bytes_g, coll_g = (corr["flops_global"],
+                                        corr["bytes_global"],
+                                        corr["coll_global"])
+            tag = "corrected"
+        terms = ra.roofline_terms(flops_g, bytes_g, coll_g, rec["chips"])
+        mf = ra.model_flops(cfg, spec.kind, spec.seq, spec.global_batch)
+        ratio = mf / flops_g if flops_g else float("nan")
+        rows.append((
+            f"roofline/{cell}", terms["bound_step_s"] * 1e6,
+            f"dom={terms['dominant']},comp={terms['compute_s']:.2e}s,"
+            f"mem={terms['memory_s']:.2e}s,coll={terms['collective_s']:.2e}s,"
+            f"model/hlo_flops={ratio:.2f},{tag}"))
+    return rows

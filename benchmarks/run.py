@@ -1,0 +1,44 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (benchmarks.common.Row). Modules:
+#   fig1_breakdown    paper Fig. 1   layer computation shares
+#   fig8_reuse_rate   paper Fig. 8   reuse rate per model / buffer budget
+#   fig9_speedup      paper Fig. 9   AxLLM vs baseline cycles + absolutes
+#   lora_table        paper §V       LoRA overlap + adapter speedup
+#   shiftadd_compare  paper §V       vs ShiftAddLLM (cycles + exactness)
+#   power_table       paper §V       power/energy model
+#   kernel_bench      (framework)    int8/int4 vs f32 matmul + KV bytes
+#   roofline_table    (deliverable g) per-cell roofline terms from dry-run
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig1_breakdown, fig8_reuse_rate, fig9_speedup,
+                            kernel_bench, lora_table, power_table,
+                            roofline_table, shiftadd_compare)
+
+    modules = [fig1_breakdown, fig8_reuse_rate, fig9_speedup, lora_table,
+               shiftadd_compare, power_table, kernel_bench, roofline_table]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness robust mid-development
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for r in rows:
+            derived = str(r[2]).replace(",", ";")
+            print(f"{r[0]},{r[1]:.2f},{derived}")
+        print(f"{name}/_elapsed,{(time.time()-t0)*1e6:.0f},-")
+
+
+if __name__ == "__main__":
+    main()

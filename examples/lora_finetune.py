@@ -1,0 +1,107 @@
+"""LoRA fine-tuning example (paper §III + Fig. 5).
+
+Takes a base dense LM, freezes it, trains rank-16 adapters on the attention
+projections against a shifted data distribution, then:
+  1. verifies merged-adapter equivalence,
+  2. serves base + adapters through the quantized combined path, and
+  3. measures the paper's Fig. 5 statistic on the REAL trained A matrices:
+     the fraction of A-row values already present in the corresponding W row
+     (paper: ~90%), and the adapter-matrix speedup from combined reuse
+     (paper: ~1.8x).
+
+Run:  PYTHONPATH=src python examples/lora_finetune.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import axllm_linear as AL
+from repro.core import reuse, simulator
+from repro.core.quantization import QuantConfig, decode_codes, quantize
+from repro.data.pipeline import make_dataset
+from repro.models import attention as ATT
+from repro.models.model import get_model
+from repro.optim import adamw
+
+
+def main():
+    cfg = ModelConfig(name="lora-base", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=256, head_dim=32, vocab_pad_multiple=64,
+                      dtype="float32")
+    api = get_model(cfg)
+    base = api.init(jax.random.PRNGKey(0))
+    lcfg = AL.LoRAConfig(rank=16, alpha=32.0)
+
+    # adapters for wq/wv of every layer (trainable); base frozen
+    rng = jax.random.PRNGKey(1)
+    adapters = {}
+    d, h, hk, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    for tgt, n_out in (("wq", h * hd), ("wv", hk * hd)):
+        keys = jax.random.split(jax.random.fold_in(rng, hash(tgt) % 997),
+                                cfg.n_layers)
+        adapters[tgt] = jax.vmap(
+            lambda k: AL.lora_init(k, d, n_out, lcfg))(keys)
+
+    def apply_adapters(base_params, ads):
+        """Fold adapters into effective weights (merge-apply formulation —
+        equivalent to the runtime combined path, convenient for jax.grad)."""
+        layers = dict(base_params["layers"])
+        attn = dict(layers["attn"])
+        for tgt, ad in ads.items():
+            delta = jnp.einsum("lik,lkj->lij", ad["lora_a"], ad["lora_b"])
+            attn[tgt] = attn[tgt] + lcfg.scaling * delta
+        layers["attn"] = attn
+        return dict(base_params, layers=layers)
+
+    def loss_fn(ads, batch):
+        return api.loss(apply_adapters(base, ads), batch)
+
+    ocfg = adamw.AdamWConfig(lr=1e-3, weight_decay=0.0)
+    opt = adamw.init(adapters, ocfg)
+    # fine-tuning distribution: different seed/bigram structure
+    ds = make_dataset(cfg, batch=16, seq=64, seed=1234)
+
+    @jax.jit
+    def step(ads, opt_state, batch, s):
+        loss, g = jax.value_and_grad(loss_fn)(ads, batch)
+        ads, opt_state, _ = adamw.update(ads, g, opt_state, ocfg, 1.0)
+        return ads, opt_state, loss
+
+    for s in range(60):
+        b = jax.tree_util.tree_map(jnp.asarray, ds.batch_at(s))
+        adapters, opt, loss = step(adapters, opt, b, s)
+        if s % 20 == 0:
+            print(f"step {s:3d}  adapter loss {float(loss):.3f}")
+
+    # 1) merge equivalence on one layer
+    w0 = base["layers"]["attn"]["wq"][0]
+    ad0 = jax.tree_util.tree_map(lambda a: a[0], adapters["wq"])
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, cfg.d_model))
+    y_rt = AL.lora_linear(x, w0, ad0, lcfg)
+    y_merged = x @ AL.merge_lora(w0, ad0, lcfg)
+    print("merge equivalence max err:",
+          float(jnp.max(jnp.abs(y_rt - y_merged))))
+
+    # 2) quantized base + adapters (Fig. 5 combined path)
+    qt = quantize(w0, QuantConfig())
+    y_q = AL.lora_linear(x, qt, ad0, lcfg, impl="ref")
+    print("quantized-base LoRA output delta vs fp:",
+          float(jnp.max(jnp.abs(y_q - y_rt))))
+
+    # 3) Fig. 5 reuse statistics on the TRAINED adapter
+    w_codes = np.asarray(decode_codes(qt)).astype(np.int32)
+    a_q = quantize(ad0["lora_a"], QuantConfig())
+    a_codes = np.asarray(decode_codes(a_q)).astype(np.int32)
+    overlap = reuse.lora_row_overlap(w_codes, a_codes)
+    sim = simulator.simulate_lora(w_codes, a_codes, simulator.SimConfig())
+    print(f"A-row overlap with W rows: {overlap:.3f}  (paper: ~0.90)")
+    print(f"adapter-matrix speedup via combined [W|A] reuse: "
+          f"{sim['adapter_speedup']:.2f}x  (paper: ~1.8x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end training driver: the repro-100m dense LM for a few hundred
+steps on the byte-level corpus (this repository's own sources), with
+checkpointing, crash resilience, straggler monitoring, and a final export of
+the quantized weight codes for the Fig. 8 reuse-rate cross-check on REAL
+trained weights (benchmarks/fig8_reuse_rate.py picks the export up).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--small]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.axllm_linear import deploy_quantize
+from repro.core.quantization import QTensor, QuantConfig, decode_codes
+from repro.data.pipeline import make_dataset
+from repro.models.model import get_model
+from repro.optim import adamw
+from repro.train.fault_tolerance import StepMonitor, resilient_train
+from repro.train.loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="4-layer variant for quick runs")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="results/train_lm/ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("repro-100m")
+    if args.small:
+        cfg = cfg.reduced(vocab_size=256, d_model=256, n_layers=4,
+                          d_ff=512, n_heads=4, n_kv_heads=2)
+    else:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, vocab_size=256, dtype="float32")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"byte-level corpus")
+
+    ocfg = adamw.AdamWConfig(lr=3e-4, int8_moments=False)
+    opt = adamw.init(params, ocfg)
+    step_jit = jax.jit(make_train_step(api, ocfg, total_steps=args.steps,
+                                       warmup=20))
+
+    def step_fn(p, o, batch, s):
+        return step_jit(p, o, jax.tree_util.tree_map(jnp.asarray, batch), s)
+
+    ds = make_dataset(cfg, batch=args.batch, seq=args.seq, seed=0,
+                      source="bytes")
+    monitor = StepMonitor()
+    params, opt, history, restarts = resilient_train(
+        train_step=step_fn, params=params, opt_state=opt, dataset=ds,
+        ckpt_dir=args.ckpt, total_steps=args.steps, save_every=50,
+        monitor=monitor, log_every=10)
+    for s, l in history[-5:]:
+        print(f"  step {s:4d}  loss {l:.3f}")
+    print(f"restarts: {restarts}, stragglers flagged: {len(monitor.events)}")
+
+    # export quantized codes of the trained weights for the Fig. 8 benchmark
+    qparams = deploy_quantize(params, QuantConfig())
+    out = {}
+    for name in ("gate", "up", "down"):
+        w = qparams["layers"]["ffn"][name]
+        if isinstance(w, QTensor):
+            out[f"ffn_{name}"] = np.asarray(decode_codes(w))[0]
+    os.makedirs("results/train_lm", exist_ok=True)
+    np.savez("results/train_lm/quantized_codes.npz", **out)
+    print("exported trained quantized codes -> "
+          "results/train_lm/quantized_codes.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""internlm2-20b [dense]: GQA decoder (arXiv:2403.17297)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92544,
+    head_dim=128,
+    act="swiglu",
+    grad_accum=8,
+)

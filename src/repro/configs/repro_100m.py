@@ -1,0 +1,21 @@
+"""repro-100m: the ~100M-parameter dense LM used by the end-to-end training
+example (examples/train_lm.py) and as the source of *real trained weights*
+for the reuse-rate validation (benchmarks/reuse_rate.py cross-checks Fig. 8
+statistics on these weights vs the Gaussian surrogate)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="repro-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab_size=32000,
+    head_dim=64,
+    act="swiglu",
+    grad_accum=1,
+    tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""whisper-small [audio]: enc-dec backbone (arXiv:2212.04356); conv/mel
+frontend STUBBED — input_specs() supplies precomputed frame embeddings
+[B, 1500, 80]. GELU + LayerNorm per the original; embeddings tied."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    head_dim=64,
+    is_encoder_decoder=True,
+    n_enc_layers=12,
+    enc_seq=1500,
+    d_feat=80,
+    act="gelu",
+    norm="layernorm",
+    tie_embeddings=True,
+    grad_accum=2,
+)

@@ -1,0 +1,79 @@
+"""Model-facing AxLLM modules: quantized linear + LoRA (paper §III).
+
+These are the integration points every architecture in `repro.models` uses:
+a linear layer whose weight may be a plain bf16 array (training / baseline)
+or a :class:`QTensor` (AxLLM serving path — codes + codebook, dispatched to
+the Pallas fused dequant-matmul on TPU). Swapping a trained model to the
+AxLLM path is `quantize_tree(params, qcfg)` — post-training, zero setup,
+exactly the paper's deployment story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, QuantConfig, quantize
+from repro.kernels import ops
+
+Array = Any
+
+
+def linear(x: Array, w, *, impl: str = "auto", out_dtype=None) -> Array:
+    """x @ w where w is an Array (dense path) or QTensor (AxLLM path)."""
+    if isinstance(w, QTensor):
+        return ops.axllm_matmul(x, w, impl=impl, out_dtype=out_dtype)
+    y = jnp.dot(x, w.astype(x.dtype))
+    return y if out_dtype is None else y.astype(out_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 16
+    alpha: float = 32.0
+    # which weight names get adapters (paper fine-tunes attention projections)
+    targets: tuple = ("wq", "wk", "wv", "wo")
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+def lora_init(rng: jax.Array, n_in: int, n_out: int,
+              cfg: LoRAConfig, dtype=jnp.float32) -> dict:
+    """A ~ N(0, 1/r) (quantization-friendly: same value locality as W rows,
+    which is what Fig. 5's combined [W ‖ A] reuse exploits), B = 0."""
+    ka, _ = jax.random.split(rng)
+    a = jax.random.normal(ka, (n_in, cfg.rank), dtype) / jnp.sqrt(cfg.rank)
+    b = jnp.zeros((cfg.rank, n_out), dtype)
+    return {"lora_a": a, "lora_b": b}
+
+
+def lora_linear(x: Array, w, adapter: Optional[dict], cfg: LoRAConfig, *,
+                impl: str = "auto", out_dtype=None) -> Array:
+    """y = x @ W + scaling * (x @ A) @ B; W may be a QTensor (Fig. 5 path)."""
+    if adapter is None:
+        return linear(x, w, impl=impl, out_dtype=out_dtype)
+    if isinstance(w, QTensor):
+        return ops.lora_matmul(x, w, adapter["lora_a"], adapter["lora_b"],
+                               cfg.scaling, impl=impl, out_dtype=out_dtype)
+    y = jnp.dot(x, w.astype(x.dtype))
+    xa = jnp.dot(x, adapter["lora_a"].astype(x.dtype))
+    y = y + cfg.scaling * jnp.dot(xa, adapter["lora_b"].astype(x.dtype))
+    return y if out_dtype is None else y.astype(out_dtype)
+
+
+def merge_lora(w: Array, adapter: dict, cfg: LoRAConfig) -> Array:
+    """Fold the adapter into a dense weight (for equivalence tests)."""
+    return w + cfg.scaling * (adapter["lora_a"] @ adapter["lora_b"]).astype(
+        w.dtype)
+
+
+def deploy_quantize(params, qcfg: QuantConfig):
+    """Post-training conversion of a trained pytree to the AxLLM serving
+    representation (wraps quantize_tree; named for discoverability)."""
+    from repro.core.quantization import quantize_tree
+    return quantize_tree(params, qcfg)

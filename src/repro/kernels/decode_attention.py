@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: single-token decode attention (flash-decode) with
+optional int8-quantized KV cache.
+
+Decode is the memory-roofline cell: per step the whole KV cache streams
+HBM->VMEM once while doing O(S·d) FLOPs. Quantizing the cache to int8 halves
+those bytes — the KV-side counterpart of the AxLLM weight-code traffic
+reduction (DESIGN.md §2) and a §Perf lever for decode_32k. Dequantization is
+fused: codes and per-(position, head) scales stream in, f32 math in VMEM.
+
+Grid: (B*H, S/bs) with the online-softmax state in VMEM scratch across the
+S dimension. Valid-length masking reads `length[b]` from an SMEM-blocked ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, bs: int,
+                   n_s: int, quantized: bool):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                     # [1, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [bs, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, :, 0, :].astype(jnp.float32)     # [bs, 1] scales
+        v = v * vs_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ik * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = kpos < len_ref[0]
+    vmask = valid.astype(jnp.float32)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[:1, :1]
+    l_prev = l_ref[:1, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new) * vmask
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == n_s - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[:1, :1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, length, *, k_scale=None,
+                            v_scale=None, block_s: int = 512,
+                            interpret: bool = False):
+    """q: [B, H, d]; caches: [B, S, Hk, d]; length: [B] -> [B, H, d]."""
+    b, h, d = q.shape
+    s, hk = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hk
+    quantized = k_scale is not None
+    bs = min(block_s, s)
+    if s % bs:
+        raise ValueError(f"cache length {s} not divisible by block {bs}")
+    n_s = s // bs
+
+    qf = q.reshape(b * h, d)
+    if not quantized:
+        # feed dummy scale refs so the kernel signature is uniform
+        k_scale = jnp.ones((b, s, hk, 1), jnp.float32)
+        v_scale = jnp.ones((b, s, hk, 1), jnp.float32)
+
+    def kv_index(bh, ik):
+        return (bh // h, ik, (bh % h) // rep, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=1.0 / (d ** 0.5), bs=bs,
+                          n_s=n_s, quantized=quantized),
+        grid=(b * h, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, ik: (bh // h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, d), lambda bh, ik: (bh, 0)),
+            pl.BlockSpec((1, bs, 1, d), kv_index),
+            pl.BlockSpec((1, bs, 1, d), kv_index),
+            pl.BlockSpec((1, bs, 1, 1), kv_index),
+            pl.BlockSpec((1, bs, 1, 1), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bh, ik: (bh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((8, 128), jnp.float32),
+            pltpu.VMEM((8, 128), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(length.astype(jnp.int32), qf, k_cache, v_cache, k_scale, v_scale)
+    return out.reshape(b, h, d)

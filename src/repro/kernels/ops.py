@@ -1,0 +1,149 @@
+"""Public kernel entry points: Pallas-on-TPU, jnp-oracle elsewhere.
+
+Every op takes `impl` in {"auto", "pallas", "ref", "pallas_interpret"}:
+  auto             -> pallas on TPU backends, ref otherwise (CPU dry-run path)
+  pallas_interpret -> pallas kernel body executed in Python (tests on CPU)
+
+The wrapper layer owns all shape plumbing the kernels require: scale-semantics
+normalization (affine kernels consume scale/qmax), padding M to block
+multiples, and flattening leading batch dims.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor
+from repro.kernels import ref as _ref
+from repro.kernels import axllm_matmul as _amm
+
+
+def set_analysis_mode(on: bool) -> None:
+    """Roofline aux lowering: unroll inner attention chunk loops so HLO cost
+    analysis counts them fully (see ref.ANALYSIS_UNROLL)."""
+    _ref.ANALYSIS_UNROLL = on
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas(impl: str) -> bool:
+    if impl == "auto":
+        return _on_tpu()
+    return impl.startswith("pallas")
+
+
+def _interpret(impl: str) -> bool:
+    return impl == "pallas_interpret"
+
+
+# ---------------------------------------------------------------------------
+# AxLLM quantized matmul
+# ---------------------------------------------------------------------------
+
+def _kernel_scale(qt: QTensor) -> jax.Array:
+    """Scale in the form the kernel consumes: [1, N] or [K/g, N] f32,
+    folding the /qmax of affine dequantization."""
+    n = qt.shape[-1]
+    if qt.granularity == "per_group":
+        s = qt.scale.reshape(-1, n)
+    else:
+        s = qt.scale.reshape(1, n) if qt.scale.size == n else jnp.broadcast_to(
+            qt.scale.reshape(1, 1), (1, n))
+    if qt.mode == "affine":
+        qmax = (1 << (qt.bits - 1)) - 1
+        s = s / qmax
+    return s.astype(jnp.float32)
+
+
+def _pick_blocks(m: int, k: int, n: int, group_size: int, per_group: bool):
+    bm = 128 if m >= 128 else max(8, 1 << (m - 1).bit_length())
+    bk = min(512, k)
+    bn = min(256, n)
+    if per_group:
+        bk = max(group_size, (bk // group_size) * group_size)
+    return bm, bk, bn
+
+
+def axllm_matmul(x: jax.Array, qt: QTensor, *, impl: str = "auto",
+                 out_dtype=None) -> jax.Array:
+    """y = x @ deq(qt). x: [..., K]; qt: [K, N]. Returns [..., N]."""
+    out_dtype = out_dtype or x.dtype
+    if not _use_pallas(impl):
+        lead = x.shape[:-1]
+        y = _ref.axllm_matmul_ref(x.reshape(-1, x.shape[-1]), qt, out_dtype)
+        return y.reshape(*lead, -1)
+
+    kdim, n = qt.shape[-2], qt.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    per_group = qt.granularity == "per_group"
+    bm, bk, bn = _pick_blocks(m, kdim, n, qt.group_size, per_group)
+    pad_m = (-m) % bm
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+    scale = _kernel_scale(qt)
+    from repro.core.quantization import resolve_codebook
+    y = _amm.axllm_matmul_pallas(
+        x2, qt.codes, scale, resolve_codebook(qt),
+        bits=qt.bits, packed=qt.packed, group_size=qt.group_size,
+        blocks=(bm, bk, bn), interpret=_interpret(impl))
+    if pad_m:
+        y = y[:m]
+    return y.reshape(*lead, n).astype(out_dtype)
+
+
+def lora_matmul(x: jax.Array, qt: QTensor, a: jax.Array, b: jax.Array,
+                scaling: float, *, impl: str = "auto",
+                out_dtype=None) -> jax.Array:
+    """y = x @ deq(qt) + scaling * (x @ A) @ B (paper Fig. 5 combined path)."""
+    out_dtype = out_dtype or x.dtype
+    base = axllm_matmul(x, qt, impl=impl, out_dtype=jnp.float32)
+    xa = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32))
+    delta = jnp.dot(xa, b.astype(jnp.float32))
+    return (base + scaling * delta).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    impl: str = "auto") -> jax.Array:
+    """q: [B, Sq, H, d]; k, v: [B, Sk, Hk, d] -> [B, Sq, H, d]."""
+    if _use_pallas(impl):
+        from repro.kernels import flash_attention as _fa
+        return _fa.flash_attention_pallas(
+            q, k, v, causal=causal, interpret=_interpret(impl))
+    # memory-safe oracle (chunked online softmax) once the full [B,H,Sq,Sk]
+    # score tensor stops being trivially small
+    if q.shape[1] * k.shape[1] > 1024 * 1024:
+        return _ref.chunked_attention_ref(q, k, v, causal=causal)
+    return _ref.attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, k_scale=None,
+                     v_scale=None, impl: str = "auto") -> jax.Array:
+    """q: [B, H, d]; caches [B, S, Hk, d] (int8 if scales given); length [B]."""
+    if _use_pallas(impl):
+        from repro.kernels import decode_attention as _da
+        return _da.decode_attention_pallas(
+            q, k_cache, v_cache, length, k_scale=k_scale, v_scale=v_scale,
+            interpret=_interpret(impl))
+    return _ref.decode_attention_ref(q, k_cache, v_cache, length,
+                                     k_scale=k_scale, v_scale=v_scale)
+
+
+def quantize_channels(w, *, bits: int = 8, impl: str = "auto"):
+    """Per-channel absmax quantization (codes, scale) — used for KV-cache
+    quantization at serve time."""
+    if _use_pallas(impl):
+        from repro.kernels import quantize as _q
+        return _q.quantize_pallas(w, bits=bits, interpret=_interpret(impl))
+    return _ref.quantize_ref(w, bits=bits)

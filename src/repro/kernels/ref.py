@@ -1,0 +1,186 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: each Pallas kernel is validated against
+its oracle in interpret mode across shape/dtype sweeps
+(tests/test_kernels_*.py), and they double as the XLA fallback path used on
+non-TPU backends (including the CPU dry-run — where the int8/int4 weight
+arrays still flow through HLO, so cost_analysis sees the reduced byte
+traffic the AxLLM technique is about).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, decode_codes, dequantize, lookup
+
+
+# ---------------------------------------------------------------------------
+# AxLLM quantized matmul
+# ---------------------------------------------------------------------------
+
+def axllm_matmul_ref(x: jax.Array, qt: QTensor,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ deq(W) with f32 accumulation.
+
+    Arithmetic contract (paper §III.b): every product is x[i] * value where
+    value = codebook[code] * scale — identical to the RC-cached products
+    modulo float summation order.
+    """
+    w = dequantize(qt, jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), w,
+                preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
+def lora_matmul_ref(x: jax.Array, qt: QTensor, a: jax.Array, b: jax.Array,
+                    scaling: float, out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ deq(W) + scaling * (x @ A) @ B  (paper §III, LoRA support)."""
+    base = axllm_matmul_ref(x, qt, jnp.float32)
+    xa = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32))
+    delta = jnp.dot(xa, b.astype(jnp.float32))
+    return (base + scaling * delta).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, Hk, d] -> [B, S, Hk*n_rep, d] (GQA head broadcast)."""
+    if n_rep == 1:
+        return k
+    b, s, hk, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hk, n_rep, d))
+    return k.reshape(b, s, hk * n_rep, d)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: Optional[float] = None,
+                  bias: Optional[jax.Array] = None) -> jax.Array:
+    """Full softmax attention. q: [B, Sq, H, d]; k, v: [B, Sk, Hk, d]."""
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    n_rep = h // hk
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if bias is not None:
+        logits = logits + bias
+    if causal:
+        sk = k.shape[1]
+        # queries occupy the LAST sq positions of the sk-long key sequence
+        qpos = jnp.arange(sq) + (sk - sq)
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         length: jax.Array,
+                         k_scale: Optional[jax.Array] = None,
+                         v_scale: Optional[jax.Array] = None) -> jax.Array:
+    """One-token attention against a (possibly int8) KV cache.
+
+    q: [B, H, d]; caches: [B, S, Hk, d] (int8 codes if *_scale given, with
+    scales [B, S, Hk, 1]); length: [B] valid prefix lengths.
+    """
+    b, h, d = q.shape
+    s, hk = k_cache.shape[1], k_cache.shape[2]
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale
+    if v_scale is not None:
+        v_cache = v_cache.astype(jnp.float32) * v_scale
+    out = attention_ref(q[:, None], k_cache, v_cache, causal=False,
+                        bias=_length_bias(length, s, h))
+    return out[:, 0]
+
+
+def _length_bias(length: jax.Array, s: int, h: int) -> jax.Array:
+    mask = jnp.arange(s)[None, :] < length[:, None]          # [B, S]
+    return jnp.where(mask, 0.0, -1e30)[:, None, None, :]     # [B, 1, 1, S]
+
+
+# Analysis mode (set via kernels.ops.set_analysis_mode): unrolls the KV-chunk
+# loop so XLA cost analysis sees every chunk's FLOPs (a lax.scan body is
+# counted once) — used only by the roofline aux lowering.
+ANALYSIS_UNROLL = False
+
+
+def chunked_attention_ref(q, k, v, causal: bool = True,
+                          chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (lax.scan over KV
+    chunks) — the memory-safe fallback used for 32k prefill on the dry-run
+    path, numerically equal to attention_ref."""
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    n_rep = h // hk
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    sk = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(sq) + (sk - sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, idx = xs
+        kpos = idx * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        logits = logits * scale
+        valid = kpos[None, :] < sk
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        logits = jnp.where(valid[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    if ANALYSIS_UNROLL:
+        carry = (m0, l0, a0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[i], vc[i], jnp.asarray(i)))
+        m, l, acc = carry
+    else:
+        # checkpoint the chunk body: backward re-computes the [.., sq, chunk]
+        # probability tile instead of storing one per chunk (which would undo
+        # the whole memory saving)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(body, prevent_cse=False), (m0, l0, a0),
+            (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantization kernel oracle
+# ---------------------------------------------------------------------------
+
+def quantize_ref(w: jax.Array, bits: int = 8):
+    """Per-channel absmax quantization: returns (codes int8, scale f32)."""
+    qmax = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return codes, scale

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost/collective analysis per cell.
+
+MUST be the process entry (the XLA_FLAGS line above precedes every other
+import because jax locks the device count on first init). Never set that
+flag globally — smoke tests and benchmarks see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+  ... --cells granite-3-8b:train_4k,glm4-9b:decode_32k              # subset
+  ... --mesh multi                                                  # 2-pod
+  ... --variant baseline-bf16                                       # serve cells unquantized
+  ... --aux                                                         # 1/2-group unrolled roofline aux runs
+
+Results append to results/dryrun/<cell>__<mesh>__<variant>.json (incremental
+and resumable — one CPU core compiles these serially).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.axllm_linear import deploy_quantize
+from repro.core.quantization import QuantConfig
+from repro.dist import sharding as shd
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import get_model
+from repro.optim import adamw
+from repro.roofline import analysis as ra
+from repro.train.loop import make_train_step
+
+RESULTS_DIR = "results/dryrun"
+
+
+def _sds_with(tree_abs, spec_tree):
+    """Attach NamedShardings to an eval_shape pytree."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree_abs, spec_tree)
+
+
+def _aux_config(cfg: ModelConfig, groups: int) -> ModelConfig:
+    """Unrolled `groups`-group variant for the per-layer cost delta."""
+    upd = dict(scan_layers=False, remat=False, grad_accum=1)
+    if cfg.family == "ssm":
+        upd["n_layers"] = groups * cfg.xlstm_slstm_every
+    elif cfg.family == "hybrid":
+        upd["n_layers"] = groups * cfg.hybrid_attn_every
+    else:
+        upd["n_layers"] = groups
+        if cfg.is_encoder_decoder:
+            upd["n_enc_layers"] = groups
+    return dataclasses.replace(cfg, **upd)
+
+
+def _n_groups(cfg: ModelConfig) -> float:
+    if cfg.family == "ssm":
+        return cfg.n_layers / cfg.xlstm_slstm_every
+    if cfg.family == "hybrid":
+        return cfg.n_layers / cfg.hybrid_attn_every
+    return cfg.n_layers
+
+
+def build_cell(cfg: ModelConfig, spec: shp.ShapeSpec, mesh, variant: str,
+               aux_batch: int = 0):
+    """Returns (jitted_fn, args) ready to .lower(*args).
+
+    Variant grammar (serve cells): base in {baseline-bf16, axllm-int8,
+    axllm-int4} with optional modifiers "-kvq" (int8 KV cache) and "-tp"
+    (TP-only weight sharding — handled by _variant_rules)."""
+    if "-kvq" in variant and spec.kind != "train":
+        cfg = dataclasses.replace(cfg, quant_kv=True)
+    if variant.startswith("axllm-int4"):
+        cfg = dataclasses.replace(cfg, quant_bits=4)
+    api = get_model(cfg, impl="auto")
+    rng = jax.random.PRNGKey(0)
+    b = aux_batch or spec.global_batch
+    quantize = variant.startswith("axllm-int") and spec.kind != "train"
+    long_ctx = spec.name == "long_500k"
+
+    if spec.kind == "train":
+        ocfg = adamw.AdamWConfig(int8_moments=cfg.int8_optimizer)
+        params_abs = jax.eval_shape(api.init, rng)
+        opt_abs = jax.eval_shape(lambda p: adamw.init(p, ocfg), params_abs)
+        pspec = shd.param_specs(params_abs, mesh)
+        ospec = _opt_specs(opt_abs, params_abs, pspec, mesh)
+        # grad accumulators MUST be constrained to the param specs — XLA
+        # otherwise replicates the f32 carry (§Perf iteration 1)
+        step = make_train_step(api, ocfg, grad_specs=pspec)
+        batch_abs = shp.batch_input_specs(cfg, spec, mesh)
+        if aux_batch:
+            batch_abs = {
+                k: jax.ShapeDtypeStruct((b,) + v.shape[1:], v.dtype,
+                                        sharding=v.sharding)
+                for k, v in batch_abs.items()}
+        args = (_sds_with(params_abs, pspec), _sds_with(opt_abs, ospec),
+                batch_abs, jax.ShapeDtypeStruct((), jnp.int32))
+        return jax.jit(step, donate_argnums=(0, 1)), args
+
+    # serving cells
+    if quantize:
+        qcfg = QuantConfig(
+            bits=cfg.quant_bits,
+            mode="codebook" if cfg.quant_bits == 4 else "affine",
+            granularity="per_channel", pack=cfg.quant_bits == 4)
+        params_abs = jax.eval_shape(
+            lambda r: deploy_quantize(api.init(r), qcfg), rng)
+    else:
+        params_abs = jax.eval_shape(api.init, rng)
+    pspec = shd.param_specs(params_abs, mesh)
+    cache_abs = jax.eval_shape(lambda: api.init_cache(b, spec.seq))
+    cspec = shd.cache_specs(cache_abs, mesh, b, spec.seq,
+                            long_context=long_ctx)
+    cache_args = _sds_with(cache_abs, cspec)
+
+    if spec.kind == "prefill":
+        batch_abs = shp.batch_input_specs(cfg, spec, mesh, targets=False)
+        if aux_batch:
+            batch_abs = {
+                k: jax.ShapeDtypeStruct((b,) + v.shape[1:], v.dtype)
+                for k, v in batch_abs.items()}
+        fn = lambda p, bt, c: api.prefill(p, bt, c)
+        return (jax.jit(fn, donate_argnums=(2,)),
+                (_sds_with(params_abs, pspec), batch_abs, cache_args))
+
+    token = shp.token_input_specs(cfg, spec, mesh)
+    if aux_batch:
+        token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    fn = lambda p, t, c: api.decode(p, t, c)
+    return (jax.jit(fn, donate_argnums=(2,)),
+            (_sds_with(params_abs, pspec), token, cache_args))
+
+
+def _opt_specs(opt_abs, params_abs, pspec, mesh):
+    """Optimizer-state shardings: moments follow their parameter's spec;
+    Q8 moments are param-shaped, so codes take the param spec directly and
+    scales take it minus the (blocked) last dim."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.optim.adamw import Q8
+
+    def follow(m_abs, p_spec):
+        if isinstance(m_abs, Q8):
+            codes = p_spec
+            lead = tuple(p_spec.spec)[: m_abs.codes.ndim - 1]
+            lead = lead + (None,) * (m_abs.scale.ndim - len(lead))
+            scale = NamedSharding(mesh, PartitionSpec(
+                *lead[: m_abs.scale.ndim]))
+            return Q8(codes, scale, m_abs.shape, m_abs.pad)
+        return p_spec
+
+    is_leaf = lambda x: isinstance(x, Q8) or hasattr(x, "shape")
+    m = jax.tree_util.tree_map(follow, opt_abs["m"], pspec,
+                               is_leaf=lambda x: isinstance(x, Q8) or
+                               not isinstance(x, dict))
+    v = jax.tree_util.tree_map(follow, opt_abs["v"], pspec,
+                               is_leaf=lambda x: isinstance(x, Q8) or
+                               not isinstance(x, dict))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return {"m": m, "v": v, "count": NamedSharding(mesh, P())}
+
+
+def _variant_rules(variant: str, kind: str):
+    """Hillclimb levers: '-tp' serve variants use TP-only weight sharding
+    (no FSDP all-gather per token); '-dp' replicates weights entirely and
+    spreads batch over all axes (small-arch serving)."""
+    if kind == "train":
+        return shd.DEFAULT_RULES
+    if variant.endswith("-dp"):
+        return shd.DP_SERVE_RULES
+    if variant.endswith("-tp"):
+        return shd.SERVE_RULES
+    return shd.DEFAULT_RULES
+
+
+def run_cell(cell: shp.Cell, multi_pod: bool, variant: str,
+             with_aux: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(cell.arch)
+    spec = shp.SHAPES[cell.shape]
+    rec = {"cell": cell.key, "mesh": mesh_name, "variant": variant,
+           "chips": 512 if multi_pod else 256}
+    if cell.skip:
+        rec.update(status="skipped", reason=cell.skip)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dict(_variant_rules(variant, spec.kind))
+    if spec.name == "long_500k":
+        # the idle data axis absorbs the 500k cache (batch=1)
+        rules["cache_seq"] = rules["cache_seq_long"]
+    t0 = time.time()
+    try:
+        with shd.activate(mesh, rules):
+            fn, args = build_cell(cfg, spec, mesh, variant)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = ra.memory_dict(compiled)
+            cost = ra.cost_dict(compiled)
+            text = compiled.as_text()
+            coll = ra.parse_collectives(text)
+            del text, compiled, lowered
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), memory=mem,
+                   cost_analysis={k: cost.get(k) for k in
+                                  ("flops", "bytes accessed",
+                                   "transcendentals") if k in cost},
+                   collectives=coll,
+                   collective_bytes=ra.total_collective_bytes(coll))
+        if with_aux and not multi_pod:
+            rec["aux"] = run_aux(cfg, spec, mesh, variant)
+    except Exception as e:  # record, don't abort the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def run_aux(cfg: ModelConfig, spec: shp.ShapeSpec, mesh, variant: str) -> dict:
+    """1-group / 2-group unrolled lowering for the per-layer cost delta
+    (scan bodies are counted once by XLA cost analysis — see roofline doc).
+    Batch is scaled down for train (grad_accum=1 microbatch equivalent)."""
+    from repro.kernels import ops as kops
+
+    out = {}
+    aux_batch = max(mesh.shape.get("data", 1) * mesh.shape.get("pod", 1),
+                    spec.global_batch // max(cfg.grad_accum, 1)) \
+        if spec.kind == "train" else spec.global_batch
+    kops.set_analysis_mode(True)
+    try:
+        for g in (1, 2):
+            acfg = _aux_config(cfg, g)
+            fn, args = build_cell(acfg, spec, mesh, variant,
+                                  aux_batch=aux_batch)
+            compiled = fn.lower(*args).compile()
+            cost = ra.cost_dict(compiled)
+            text = compiled.as_text()
+            coll = ra.parse_collectives(text)
+            out[f"g{g}"] = {
+                "flops": cost.get("flops"),
+                "bytes": cost.get("bytes accessed"),
+                "collective_bytes": ra.total_collective_bytes(coll),
+                "aux_batch": aux_batch,
+            }
+            del text, compiled
+    finally:
+        kops.set_analysis_mode(False)
+    out["n_groups"] = _n_groups(cfg)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="",
+                    help="comma-separated arch:shape filters")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--variant", default="axllm-int8",
+                    help="baseline-bf16 | axllm-int8 | axllm-int4, with "
+                    "optional -kvq / -tp modifiers (e.g. axllm-int8-kvq-tp)")
+    ap.add_argument("--aux", action="store_true",
+                    help="run 1/2-group unrolled roofline aux lowering")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value applied to every cell "
+                    "in this invocation (hillclimb lever); use with --tag")
+    ap.add_argument("--tag", default="",
+                    help="suffix for result filenames (override experiments)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    if overrides:
+        from repro.configs import apply_overrides
+        global get_config
+        _orig_get = get_config
+        get_config = lambda name: apply_overrides(_orig_get(name), overrides)
+
+    os.makedirs(args.out, exist_ok=True)
+    wanted = set(args.cells.split(",")) if args.cells else None
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}
+    tag = f"__{args.tag}" if args.tag else ""
+    for cell in shp.all_cells():
+        if wanted and cell.key not in wanted:
+            continue
+        for multi in meshes[args.mesh]:
+            mesh_name = "pod2x16x16" if multi else "pod16x16"
+            fname = os.path.join(
+                args.out,
+                f"{cell.key.replace(':', '__')}__{mesh_name}"
+                f"__{args.variant}{tag}.json")
+            if os.path.exists(fname):
+                with open(fname) as f:
+                    prev = json.load(f)
+                if prev.get("status") in ("ok", "skipped") and \
+                        (not args.aux or "aux" in prev or
+                         prev.get("status") == "skipped" or multi):
+                    print(f"[skip-cached] {cell.key} {mesh_name}")
+                    continue
+            print(f"[run] {cell.key} {mesh_name} {args.variant}", flush=True)
+            rec = run_cell(cell, multi, args.variant, with_aux=args.aux)
+            with open(fname, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"  -> {rec['status']} "
+                  f"(compile {rec.get('compile_s', '-')}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

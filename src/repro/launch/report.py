@@ -1,0 +1,155 @@
+"""Render dry-run records into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.launch.report                 # roofline table
+  PYTHONPATH=src python -m repro.launch.report --compare results/dryrun_iter0
+  PYTHONPATH=src python -m repro.launch.report --variants      # serve variants
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+from repro.roofline import analysis as ra
+
+
+def load(results_dir):
+    recs = {}
+    for f in glob.glob(os.path.join(results_dir, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        recs[(r["cell"], r["mesh"], r.get("variant", "axllm-int8"))] = r
+    return recs
+
+
+def corrected(rec):
+    from benchmarks.roofline_table import corrected_totals
+    return corrected_totals(rec)
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def roofline_rows(recs, mesh="pod16x16", variant="axllm-int8"):
+    rows = []
+    for (cell, m, v), rec in sorted(recs.items()):
+        if m != mesh or v != variant:
+            continue
+        arch, shape = cell.split(":")
+        if rec["status"] == "skipped":
+            rows.append((cell, "SKIP", rec["reason"][:48], "", "", "", "",
+                         ""))
+            continue
+        if rec["status"] != "ok":
+            rows.append((cell, "ERR", rec.get("error", "")[:48], "", "", "",
+                         "", ""))
+            continue
+        cfg = get_config(arch)
+        spec = SHAPES[shape]
+        corr = corrected(rec)
+        if corr:
+            fl, by, co = (corr["flops_global"], corr["bytes_global"],
+                          corr["coll_global"])
+            tag = ""
+        else:
+            fl = (rec["cost_analysis"].get("flops") or 0) * rec["chips"]
+            by = (rec["cost_analysis"].get("bytes accessed") or 0) \
+                * rec["chips"]
+            co = rec["collective_bytes"] * rec["chips"]
+            tag = "*"
+        t = ra.roofline_terms(fl, by, co, rec["chips"])
+        mf = ra.model_flops(cfg, spec.kind, spec.seq, spec.global_batch)
+        ratio = mf / fl if fl else float("nan")
+        temp = rec["memory"].get("temp_size_in_bytes")
+        rows.append((cell, t["dominant"] + tag,
+                     f"{t['compute_s']:.2e}", f"{t['memory_s']:.2e}",
+                     f"{t['collective_s']:.2e}", f"{ratio:.2f}",
+                     fmt_bytes(temp), f"{rec.get('compile_s', '-')}s"))
+    return rows
+
+
+def print_roofline(recs, mesh, variant):
+    print(f"\n### Roofline — {mesh} / {variant} "
+          f"(terms in s; * = raw scan-undercounted)\n")
+    print("| cell | dominant | compute | memory | collective | "
+          "model/HLO flops | temp/dev | compile |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in roofline_rows(recs, mesh, variant):
+        print("| " + " | ".join(str(x) for x in r) + " |")
+
+
+def print_compare(recs_new, recs_old, mesh="pod16x16", variant="axllm-int8"):
+    print(f"\n### before/after (temp bytes + collective bytes per device)\n")
+    print("| cell | temp before | temp after | coll before | coll after |")
+    print("|---|---|---|---|---|")
+    for key in sorted(recs_new):
+        cell, m, v = key
+        if m != mesh or v != variant:
+            continue
+        a, b = recs_old.get(key), recs_new[key]
+        if not a or a["status"] != "ok" or b["status"] != "ok":
+            continue
+        ta = a["memory"].get("temp_size_in_bytes")
+        tb = b["memory"].get("temp_size_in_bytes")
+        ca, cb = a.get("collective_bytes"), b.get("collective_bytes")
+        print(f"| {cell} | {fmt_bytes(ta)} | {fmt_bytes(tb)} | "
+              f"{fmt_bytes(ca)} | {fmt_bytes(cb)} |")
+
+
+def print_variants(recs, cells, mesh="pod16x16"):
+    print("\n### serve-variant comparison (per-device)\n")
+    print("| cell | variant | mem term (s) | coll term (s) | args bytes | "
+          "temp |")
+    print("|---|---|---|---|---|---|")
+    for cell in cells:
+        for (c, m, v), rec in sorted(recs.items()):
+            if c != cell or m != mesh or rec["status"] != "ok":
+                continue
+            corr = corrected(rec)
+            chips = rec["chips"]
+            if corr:
+                by, co = corr["bytes_global"], corr["coll_global"]
+            else:
+                by = (rec["cost_analysis"].get("bytes accessed") or 0) * chips
+                co = rec["collective_bytes"] * chips
+            t = ra.roofline_terms(1.0, by, co, chips)
+            print(f"| {cell} | {v} | {t['memory_s']:.2e} | "
+                  f"{t['collective_s']:.2e} | "
+                  f"{fmt_bytes(rec['memory'].get('argument_size_in_bytes'))} |"
+                  f" {fmt_bytes(rec['memory'].get('temp_size_in_bytes'))} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--variant", default="axllm-int8")
+    ap.add_argument("--compare", default="")
+    ap.add_argument("--variants", action="store_true")
+    ap.add_argument("--cells", default="")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.compare:
+        print_compare(recs, load(args.compare), args.mesh, args.variant)
+    elif args.variants:
+        cells = args.cells.split(",") if args.cells else sorted(
+            {c for (c, m, v) in recs if SHAPES[c.split(":")[1]].kind
+             != "train"})
+        print_variants(recs, cells, args.mesh)
+    else:
+        print_roofline(recs, args.mesh, args.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Assigned input-shape sets and the 40-cell (arch x shape) enumeration.
+
+    train_4k     seq 4,096   global_batch 256   lowers train_step
+    prefill_32k  seq 32,768  global_batch 32    lowers prefill_step
+    decode_32k   seq 32,768  global_batch 128   lowers serve_step (1 token,
+                                                KV/state cache of seq_len)
+    long_500k    seq 524,288 global_batch 1     lowers serve_step; ONLY for
+                                                sub-quadratic-state archs
+                                                (ssm/hybrid) — pure-attention
+                                                archs skip (DESIGN.md §4)
+
+`input_specs(cfg, shape, mesh)` returns weak-type-correct ShapeDtypeStructs
+with shardings attached — no device allocation anywhere on the dry-run path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    skip: Optional[str] = None    # reason, when sanctioned by the assignment
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}:{self.shape}"
+
+
+def all_cells() -> List[Cell]:
+    cells = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname in SHAPES:
+            skip = None
+            if sname == "long_500k" and not cfg.supports_long_context:
+                skip = ("pure full-attention arch: 500k context requires "
+                        "sub-quadratic state (assignment-sanctioned skip)")
+            cells.append(Cell(arch, sname, skip))
+    return cells
+
+
+def sds(shape, dtype, names, mesh):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=shd.named_sharding(shape, names, mesh))
+
+
+def batch_input_specs(cfg: ModelConfig, spec: ShapeSpec, mesh,
+                      targets: bool = True):
+    b, s = spec.global_batch, spec.seq
+    out = {"tokens": sds((b, s), jnp.int32, ("batch", "seq"), mesh)}
+    if targets:
+        out["targets"] = out["tokens"]
+    if cfg.is_encoder_decoder:
+        out["frames"] = sds((b, cfg.enc_seq, cfg.d_feat), jnp.float32,
+                            ("batch", None, None), mesh)
+    return out
+
+
+def token_input_specs(cfg: ModelConfig, spec: ShapeSpec, mesh):
+    """Decode-step inputs: one new token per sequence."""
+    b = spec.global_batch
+    return sds((b,), jnp.int32, ("batch",), mesh)

@@ -1,0 +1,207 @@
+"""GQA attention block: full-sequence (train/prefill) and cached decode.
+
+KV cache layout: {"k"/"v": [B, S_max, Hk, hd]} (+ "k_scale"/"v_scale"
+[B, S_max, Hk, 1] when cfg.quant_kv — the int8-KV beyond-paper lever), plus
+"pos": [B] write cursor. Stacked per-layer caches carry a leading L dim and
+are scanned together with the stacked layer params.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.axllm_linear import linear
+from repro.dist.sharding import shard
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def init_attention(rng, cfg, dtype=jnp.float32):
+    d, h, hk, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": L.init_linear(ks[0], d, h * hd, dtype),
+        "wk": L.init_linear(ks[1], d, hk * hd, dtype),
+        "wv": L.init_linear(ks[2], d, hk * hd, dtype),
+        "wo": L.init_linear(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["wq_bias"] = jnp.zeros((h * hd,), dtype)
+        p["wk_bias"] = jnp.zeros((hk * hd,), dtype)
+        p["wv_bias"] = jnp.zeros((hk * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+    return p
+
+
+def _project_qkv(p, x, cfg, impl):
+    b, s, d = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"], impl=impl)
+    k = linear(x, p["wk"], impl=impl)
+    v = linear(x, p["wv"], impl=impl)
+    if cfg.qkv_bias:
+        q = q + p["wq_bias"].astype(q.dtype)
+        k = k + p["wk_bias"].astype(k.dtype)
+        v = v + p["wv_bias"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hk, hd)
+    v = v.reshape(b, s, hk, hd)
+    if cfg.qk_norm:  # chameleon: per-head RMS norm on q/k
+        q = L.norm_fwd(p["q_norm"], q, cfg.norm_eps)
+        k = L.norm_fwd(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               n_layers: Optional[int] = None):
+    """Stacked-over-layers KV cache (leading L dim matches layer scan)."""
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    kv_dtype = jnp.int8 if cfg.quant_kv else dtype
+    cache = {
+        "k": jnp.zeros((nl, batch, max_len, hk, hd), kv_dtype),
+        "v": jnp.zeros((nl, batch, max_len, hk, hd), kv_dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.quant_kv:
+        cache["k_scale"] = jnp.zeros((nl, batch, max_len, hk, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((nl, batch, max_len, hk, 1), jnp.float32)
+    return cache
+
+
+def _quantize_kv(x):
+    """Per-(pos, head) int8 quantization of new KV entries."""
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return codes, s.astype(jnp.float32)
+
+
+def attention_fwd(p, x, cfg, *, positions=None, impl: str = "auto"):
+    """Full-sequence causal attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, impl)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads")
+    k = shard(k, "batch", "seq", "kv_heads")
+    out = ops.flash_attention(q, k, v, causal=True, impl=impl)
+    out = out.reshape(b, s, -1)
+    return linear(out, p["wo"], impl=impl)
+
+
+def attention_prefill(p, x, cfg, layer_cache, *, impl: str = "auto"):
+    """Full-seq attention that also fills this layer's cache slice.
+
+    layer_cache: {"k": [B, S_max, Hk, hd], ...} (no leading L — the scan
+    slices it). Returns (out, updated_layer_cache).
+    """
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, impl)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    out = ops.flash_attention(q, k, v, causal=True, impl=impl)
+    out = out.reshape(b, s, -1)
+    new_cache = dict(layer_cache)
+    if cfg.quant_kv:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], kq, 0, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], vq, 0, axis=1)
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k_scale"], ks, 0, axis=1)
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v_scale"], vs, 0, axis=1)
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], k.astype(layer_cache["k"].dtype), 0, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], v.astype(layer_cache["v"].dtype), 0, axis=1)
+    return linear(out, p["wo"], impl=impl), new_cache
+
+
+def _seq_shard_ctx(cfg, batch: int, cache_len: int):
+    """If a mesh context is active and the cache's seq dim actually shards,
+    return (mesh, seq_axes, batch_axes) for the fused shard_map decode."""
+    from repro.dist import sharding as shd
+    ctx = shd._current()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    spec = shd.resolve_spec(shape, ("batch", "cache_seq", "kv_heads", None),
+                            mesh, rules)
+    seq_entry = spec[1]
+    if seq_entry is None:
+        return None
+    seq_axes = (seq_entry,) if isinstance(seq_entry, str) \
+        else tuple(seq_entry)
+    b_entry = spec[0]
+    batch_axes = () if b_entry is None else (
+        (b_entry,) if isinstance(b_entry, str) else tuple(b_entry))
+    return mesh, seq_axes, batch_axes
+
+
+def attention_decode(p, x, cfg, layer_cache, pos, *, impl: str = "auto"):
+    """One-token decode. x: [B, 1, d]; pos: [B] current positions."""
+    b = x.shape[0]
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, cfg, impl)          # [B, 1, ...]
+    q = L.rope(q, pos[:, None], cfg.rope_theta)
+    k = L.rope(k, pos[:, None], cfg.rope_theta)
+
+    ctx = _seq_shard_ctx(cfg, b, layer_cache["k"].shape[1])
+    if ctx is not None:
+        # seq-sharded cache: fused local update + flash combine (avoids the
+        # GSPMD cache all-gather — §Perf decode lever)
+        from repro.kernels import sharded_decode as SD
+        mesh, seq_axes, batch_axes = ctx
+        cache = dict(layer_cache)
+        if cfg.quant_kv:
+            kq, ksc = _quantize_kv(k)
+            vq, vsc = _quantize_kv(v)
+            out, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"] \
+                = SD.decode_attention_seqsharded(
+                    q[:, 0], layer_cache["k"], layer_cache["v"],
+                    kq[:, 0], vq[:, 0], pos, pos + 1, mesh, seq_axes,
+                    batch_axes, k_scale=layer_cache["k_scale"],
+                    v_scale=layer_cache["v_scale"],
+                    new_k_scale=ksc[:, 0], new_v_scale=vsc[:, 0])
+        else:
+            out, cache["k"], cache["v"] = SD.decode_attention_seqsharded(
+                q[:, 0], layer_cache["k"], layer_cache["v"],
+                k[:, 0], v[:, 0], pos, pos + 1, mesh, seq_axes, batch_axes)
+        out = out.reshape(b, 1, h * hd)
+        return linear(out, p["wo"], impl=impl), cache
+
+    cache = dict(layer_cache)
+    bidx = jnp.arange(b)
+    if cfg.quant_kv:
+        kq, ksc = _quantize_kv(k)
+        vq, vsc = _quantize_kv(v)
+        cache["k"] = layer_cache["k"].at[bidx, pos].set(kq[:, 0])
+        cache["v"] = layer_cache["v"].at[bidx, pos].set(vq[:, 0])
+        cache["k_scale"] = layer_cache["k_scale"].at[bidx, pos].set(ksc[:, 0])
+        cache["v_scale"] = layer_cache["v_scale"].at[bidx, pos].set(vsc[:, 0])
+        out = ops.decode_attention(
+            q[:, 0], cache["k"], cache["v"], pos + 1,
+            k_scale=cache["k_scale"], v_scale=cache["v_scale"], impl=impl)
+    else:
+        cache["k"] = layer_cache["k"].at[bidx, pos].set(
+            k[:, 0].astype(layer_cache["k"].dtype))
+        cache["v"] = layer_cache["v"].at[bidx, pos].set(
+            v[:, 0].astype(layer_cache["v"].dtype))
+        out = ops.decode_attention(q[:, 0], cache["k"], cache["v"], pos + 1,
+                                   impl=impl)
+    out = out.reshape(b, 1, h * hd)
+    return linear(out, p["wo"], impl=impl), cache

@@ -1,0 +1,218 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every `cfg.hybrid_attn_every` layers (arXiv:2411.15242).
+
+The shared block's *weights* are applied at every site, but each site keeps
+its own KV cache (stacked on a leading site dim). Following Zamba, the shared
+block sees concat(hidden, initial_embedding) projected back to d_model
+("concat_proj"); the per-site LoRA specialization of Zamba2 is implemented as
+an optional rank-16 adapter stack (enabled by default — it is tiny and it is
+the LoRA surface the AxLLM Fig. 5 reuse targets in this arch).
+
+Layer layout: n_layers = full_groups * every + remainder; a group is
+[shared-attn site, `every` mamba layers]; remainder mamba layers close the
+stack. Both levels are scans over stacked params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def _groups(cfg):
+    every = cfg.hybrid_attn_every
+    assert every > 0
+    return cfg.n_layers // every, cfg.n_layers % every, every
+
+
+def init_shared_block(rng, cfg, dtype):
+    ks = jax.random.split(rng, 4)
+    return {
+        "concat_proj": L.init_linear(ks[0], 2 * cfg.d_model, cfg.d_model,
+                                     dtype),
+        "ln1": L.init_norm(cfg),
+        "attn": A.init_attention(ks[1], cfg, dtype),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(ks[2], cfg, dtype=dtype),
+    }
+
+
+def init_params(rng, cfg):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    n_full, rem, every = _groups(cfg)
+    ke, km, kr, ks = jax.random.split(rng, 4)
+    mkeys = jax.random.split(km, max(n_full * every, 1))
+    mkeys = mkeys[: n_full * every].reshape(n_full, every, -1)
+    mamba = jax.vmap(jax.vmap(lambda k: S.init_mamba2(k, cfg, dtype)))(mkeys)
+    p = {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "mamba": mamba,                       # [n_full, every, ...]
+        "shared": init_shared_block(ks, cfg, dtype),
+        "final_norm": L.init_norm(cfg),
+    }
+    if rem:
+        rkeys = jax.random.split(kr, rem)
+        p["mamba_rem"] = jax.vmap(
+            lambda k: S.init_mamba2(k, cfg, dtype))(rkeys)
+    return p
+
+
+def _shared_fwd(sp, x, x0, cfg, impl, cache=None, pos=None, mode="train"):
+    """Apply the shared attention block. x, x0: [B, S, d]."""
+    from repro.core.axllm_linear import linear
+    xin = linear(jnp.concatenate([x, x0], -1), sp["concat_proj"])
+    h = L.norm_fwd(sp["ln1"], xin, cfg.norm_eps)
+    if mode == "train":
+        att = A.attention_fwd(sp["attn"], h, cfg, impl=impl)
+        new_cache = None
+    elif mode == "prefill":
+        att, new_cache = A.attention_prefill(sp["attn"], h, cfg, cache,
+                                             impl=impl)
+    else:
+        att, new_cache = A.attention_decode(sp["attn"], h, cfg, cache, pos,
+                                            impl=impl)
+    xin = xin + att
+    h2 = L.norm_fwd(sp["ln2"], xin, cfg.norm_eps)
+    out = x + xin + L.mlp_fwd(sp["mlp"], h2, cfg, impl=impl)
+    return shard(out, "batch", "seq"), new_cache
+
+
+def forward(params, tokens, cfg, impl: str = "auto"):
+    n_full, rem, every = _groups(cfg)
+    x = L.embed_fwd(params["embed"], tokens)
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    x0 = x
+
+    def mamba_body(carry, mp):
+        return carry + S.mamba2_fwd(mp, carry, cfg), None
+
+    def group_body(carry, gp):
+        carry, _ = _shared_fwd(params["shared"], carry, x0, cfg, impl)
+        body = jax.checkpoint(mamba_body, prevent_cse=False) if cfg.remat \
+            else mamba_body
+        carry, _ = L.maybe_scan(body, carry, gp, cfg.scan_layers)
+        return carry, None
+
+    x, _ = L.maybe_scan(group_body, x, params["mamba"], cfg.scan_layers)
+    if rem:
+        x, _ = L.maybe_scan(mamba_body, x, params["mamba_rem"],
+                            cfg.scan_layers)
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg, impl: str = "auto"):
+    logits = forward(params, batch["tokens"], cfg, impl=impl)
+    return L.cross_entropy(logits, batch["targets"], cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    n_full, rem, every = _groups(cfg)
+    dtype = dtype or (jnp.bfloat16 if cfg.dtype == "bfloat16"
+                      else jnp.float32)
+
+    def stack(tree, n):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    conv, ssm_st = S.init_mamba_state(cfg, batch, dtype)
+    cache = {
+        "attn": A.init_cache(cfg, batch, max_len, dtype, n_layers=n_full),
+        "conv": stack(stack(conv, every), n_full),
+        "ssm": stack(stack(ssm_st, every), n_full),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if rem:
+        cache["conv_rem"] = stack(conv, rem)
+        cache["ssm_rem"] = stack(ssm_st, rem)
+    return cache
+
+
+def decode_step(params, token, cfg, cache, impl: str = "auto"):
+    n_full, rem, every = _groups(cfg)
+    pos = cache["pos"]
+    x = L.embed_fwd(params["embed"], token[:, None])
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    x0 = x
+    attn_kv = {k: v for k, v in cache["attn"].items() if k != "pos"}
+
+    def mamba_body(carry, inp):
+        mp, cv, st = inp
+        out, (ncv, nst) = S.mamba2_step(mp, carry, cfg, cv, st)
+        return carry + out, (ncv, nst)
+
+    def group_body(carry, inp):
+        gp, site_kv, cv, st = inp
+        carry, new_kv = _shared_fwd(params["shared"], carry, x0, cfg, impl,
+                                    cache=site_kv, pos=pos, mode="decode")
+        carry, (ncv, nst) = L.maybe_scan(mamba_body, carry, (gp, cv, st),
+                                         cfg.scan_layers)
+        return carry, (new_kv, ncv, nst)
+
+    x, (new_kv, new_conv, new_ssm) = L.maybe_scan(
+        group_body, x,
+        (params["mamba"], attn_kv, cache["conv"], cache["ssm"]),
+        cfg.scan_layers)
+    new_cache = dict(cache)
+    new_cache["attn"] = dict(new_kv)
+    new_cache["attn"]["pos"] = pos + 1
+    new_cache["conv"], new_cache["ssm"] = new_conv, new_ssm
+    if rem:
+        x, (ncr, nsr) = L.maybe_scan(
+            mamba_body, x,
+            (params["mamba_rem"], cache["conv_rem"], cache["ssm_rem"]),
+            cfg.scan_layers)
+        new_cache["conv_rem"], new_cache["ssm_rem"] = ncr, nsr
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg, cache, impl: str = "auto"):
+    """Parallel prefill: chunkwise SSD over the full prompt + per-site
+    attention prefill; emits all recurrent states and the filled site KVs."""
+    n_full, rem, every = _groups(cfg)
+    b, s = tokens.shape
+    pos = jnp.full((b,), s, jnp.int32)
+    x = L.embed_fwd(params["embed"], tokens)
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    x0 = x
+    attn_kv = {k: v for k, v in cache["attn"].items() if k != "pos"}
+
+    def mamba_body(carry, mp):
+        out, (cv, st) = S.mamba2_fwd(mp, carry, cfg, return_state=True)
+        return carry + out, (cv, st)
+
+    def group_body(carry, inp):
+        gp, site_kv = inp
+        carry, new_kv = _shared_fwd(params["shared"], carry, x0, cfg, impl,
+                                    cache=site_kv, mode="prefill")
+        carry, (cv, st) = L.maybe_scan(mamba_body, carry, gp,
+                                       cfg.scan_layers)
+        return carry, (new_kv, cv, st)
+
+    x, (new_kv, conv, ssm_st) = L.maybe_scan(
+        group_body, x, (params["mamba"], attn_kv), cfg.scan_layers)
+    new_cache = dict(cache)
+    new_cache["attn"] = dict(new_kv)
+    new_cache["attn"]["pos"] = pos
+    new_cache["conv"], new_cache["ssm"] = conv, ssm_st
+    if rem:
+        x, (cvr, str_) = L.maybe_scan(mamba_body, x, params["mamba_rem"],
+                                      cfg.scan_layers)
+        new_cache["conv_rem"], new_cache["ssm_rem"] = cvr, str_
+    x = L.norm_fwd(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
+    new_cache["pos"] = pos
+    return logits, new_cache

@@ -1,0 +1,99 @@
+"""Family dispatcher: one uniform API over all 10 assigned architectures.
+
+    api = get_model(cfg)
+    params = api.init(rng)                      # or jax.eval_shape(api.init, rng)
+    loss = api.loss(params, batch)              # train_4k
+    logits, cache = api.prefill(params, batch, cache)   # prefill_32k
+    logits, cache = api.decode(params, token, cache)    # decode_32k / long_500k
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, transformer, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    forward: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: mod.init_params(rng, cfg),
+            loss=lambda p, b: mod.loss_fn(p, b, cfg, impl=impl),
+            forward=lambda p, b: mod.forward(p, b["tokens"], cfg, impl=impl),
+            init_cache=lambda batch, max_len: mod.init_cache(
+                cfg, batch, max_len),
+            prefill=lambda p, b, c: mod.prefill(p, b["tokens"], cfg, c,
+                                                impl=impl),
+            decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+        )
+    if fam == "ssm":
+        mod = xlstm
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: mod.init_params(rng, cfg),
+            loss=lambda p, b: mod.loss_fn(p, b, cfg, impl=impl),
+            forward=lambda p, b: mod.forward(p, b["tokens"], cfg, impl=impl),
+            init_cache=lambda batch, max_len: mod.init_cache(cfg, batch,
+                                                             max_len),
+            prefill=lambda p, b, c: mod.prefill(p, b["tokens"], cfg, c,
+                                                impl=impl),
+            decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+        )
+    if fam == "hybrid":
+        mod = hybrid
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: mod.init_params(rng, cfg),
+            loss=lambda p, b: mod.loss_fn(p, b, cfg, impl=impl),
+            forward=lambda p, b: mod.forward(p, b["tokens"], cfg, impl=impl),
+            init_cache=lambda batch, max_len: mod.init_cache(cfg, batch,
+                                                             max_len),
+            prefill=lambda p, b, c: mod.prefill(p, b["tokens"], cfg, c,
+                                                impl=impl),
+            decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+        )
+    if fam == "audio":
+        mod = encdec
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: mod.init_params(rng, cfg),
+            loss=lambda p, b: mod.loss_fn(p, b, cfg, impl=impl),
+            forward=lambda p, b: mod.forward(p, b, cfg, impl=impl),
+            init_cache=lambda batch, max_len: mod.init_cache(cfg, batch,
+                                                             max_len),
+            prefill=lambda p, b, c: mod.prefill(p, b, cfg, c, impl=impl),
+            decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def make_batch(cfg: ModelConfig, rng, batch: int, seq: int):
+    """Concrete random batch for smoke tests / examples."""
+    kt, kf = jax.random.split(jax.random.PRNGKey(rng) if isinstance(rng, int)
+                              else rng)
+    tokens = jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size,
+                                jnp.int32)
+    out = {"tokens": tokens, "targets": jnp.roll(tokens, -1, axis=1)}
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.random.normal(
+            kf, (batch, cfg.enc_seq, cfg.d_feat), jnp.float32)
+    return out

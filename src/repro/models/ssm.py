@@ -1,0 +1,216 @@
+"""Mamba2 (SSD) mixer: chunkwise-parallel training form + recurrent decode.
+
+The chunked SSD algorithm (Dao & Gu, 2024) is implemented with per-head B/C
+tensors so the same core serves both Mamba2 (ngroups=1: B/C broadcast over
+heads) and the xLSTM mLSTM cell (k/q are per-head). State recurrence:
+
+    h_t = a_t * h_{t-1} + x_t ⊗ B_t          h: [H, P, N]
+    y_t = (h_t · C_t) + D * x_raw_t
+
+with a_t = exp(A * dt_t) ∈ (0,1), x_t pre-scaled by dt_t. Chunkwise:
+intra-chunk attention-like term + inter-chunk state scan — sub-quadratic in
+sequence length, which is exactly why the zamba2/xlstm cells run the
+long_500k shape the pure-attention archs must skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.axllm_linear import linear
+from repro.dist.sharding import shard
+from repro.models import layers as L
+
+
+def _segsum(la):
+    """la: [..., Q] log-decays -> [..., Q, Q] cumulative segment sums,
+    M[i, j] = sum_{j < t <= i} la_t for i >= j, -inf above the diagonal."""
+    q = la.shape[-1]
+    cs = jnp.cumsum(la, axis=-1)
+    m = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, m, -jnp.inf)
+
+
+def ssd_chunked(x, log_a, b, c, chunk: int = 128):
+    """Chunkwise SSD scan.
+
+    x:     [B, S, H, P]   (dt/input-gate pre-scaled)
+    log_a: [B, S, H]      log decay per step (<= 0)
+    b, c:  [B, S, H, N]   per-head input/output projections
+    Returns y: [B, S, H, P] and final state h: [B, H, P, N].
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+    xc = x.reshape(bsz, nc, q, h, p)
+    lac = log_a.reshape(bsz, nc, q, h).transpose(0, 1, 3, 2)  # [B,nc,H,Q]
+    bc = b.reshape(bsz, nc, q, h, n)
+    cc = c.reshape(bsz, nc, q, h, n)
+
+    # 1) intra-chunk (masked attention-like term)
+    lmat = jnp.exp(_segsum(lac))                               # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                        scores, lmat, xc)
+
+    # 2) per-chunk end states
+    acum = jnp.cumsum(lac, axis=-1)                            # [B,nc,H,Q]
+    decay_to_end = jnp.exp(acum[..., -1:] - acum)              # [B,nc,H,Q]
+    states = jnp.einsum("bckhn,bchk,bckhp->bchpn",
+                        bc, decay_to_end, xc)                  # [B,nc,H,P,N]
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(acum[..., -1])                       # [B,nc,H]
+
+    def scan_fn(hstate, inp):
+        st, dk = inp                                           # [B,H,P,N],[B,H]
+        new = hstate * dk[..., None, None] + st
+        return new, hstate                                     # emit state BEFORE chunk
+
+    h0 = jnp.zeros((bsz, h, p, n), x.dtype)
+    hT, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                   # [B,nc,H,P,N]
+
+    # 4) contribution of the carried-in state
+    state_decay = jnp.exp(acum)                                # [B,nc,H,Q]
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", cc, h_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)
+    return y[:, :s], hT
+
+
+def ssd_step(hstate, x_t, log_a_t, b_t, c_t):
+    """Single recurrent step. hstate: [B,H,P,N]; x_t: [B,H,P];
+    log_a_t: [B,H]; b_t, c_t: [B,H,N] -> (y_t [B,H,P], new state)."""
+    a = jnp.exp(log_a_t)[..., None, None]
+    new = hstate * a + jnp.einsum("bhp,bhn->bhpn", x_t, b_t)
+    y = jnp.einsum("bhpn,bhn->bhp", new, c_t)
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(rng, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    ks = jax.random.split(rng, 4)
+    # fused in_proj: [z (di), x (di), B (n), C (n), dt (nh)]
+    out_dim = 2 * di + 2 * n + nh
+    p = {
+        "ln": L.init_norm(cfg, d),
+        "in_proj": L.init_linear(ks[0], d, out_dim, dtype),
+        "conv_w": L.truncated_normal(ks[1], (cfg.ssm_conv, di + 2 * n),
+                                     0.2, dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_y": L.init_norm(cfg, di),
+        "out_proj": L.init_linear(ks[3], di, d, dtype),
+    }
+    return p
+
+
+def _mamba_preact(p, x, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    zxbcdt = linear(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt, di, n, nh
+
+
+def _causal_conv(xbc, w, b, prev=None):
+    """Depthwise causal conv. xbc: [B, S, C]; w: [K, C]; prev: [B, K-1, C]."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    full = jnp.concatenate([prev, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    new_prev = full[:, -(k - 1):] if k > 1 else prev
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_prev
+
+
+def mamba2_fwd(p, x, cfg, conv_state=None, ssm_state=None, *,
+               return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x: [B, S, d] -> [B, S, d]."""
+    xn = L.norm_fwd(p["ln"], x, cfg.norm_eps)
+    z, xbc, dt, di, n, nh = _mamba_preact(p, xn, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    bsz, s, _ = x.shape
+    hd = cfg.ssm_head_dim
+    xh = xi.reshape(bsz, s, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                        # [B,S,H]
+    log_a = (-jnp.exp(p["a_log"]) * dt)                         # [B,S,H] <= 0
+    xs = (xh.astype(jnp.float32) * dt[..., None])
+    bh = jnp.broadcast_to(bmat.astype(jnp.float32)[:, :, None, :],
+                          (bsz, s, nh, n))
+    ch = jnp.broadcast_to(cmat.astype(jnp.float32)[:, :, None, :],
+                          (bsz, s, nh, n))
+    y, h_t = ssd_chunked(xs, log_a, bh, ch)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = L.norm_fwd(p["norm_y"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    out = shard(out, "batch", "seq")
+    if return_state:
+        return out, (new_conv, h_t)
+    return out
+
+
+def mamba2_step(p, x, cfg, conv_state, ssm_state):
+    """Single-token decode. x: [B, 1, d]; conv_state: [B, K-1, di+2n];
+    ssm_state: [B, H, P, N]."""
+    xn = L.norm_fwd(p["ln"], x, cfg.norm_eps)
+    z, xbc, dt, di, n, nh = _mamba_preact(p, xn, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    bsz = x.shape[0]
+    hd = cfg.ssm_head_dim
+    xh = xi.reshape(bsz, nh, hd).astype(jnp.float32) if xi.ndim == 2 else \
+        xi[:, 0].reshape(bsz, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    log_a = -jnp.exp(p["a_log"]) * dt                           # [B,H]
+    xs = xh * dt[..., None]
+    bh = jnp.broadcast_to(bmat[:, 0].astype(jnp.float32)[:, None, :],
+                          (bsz, nh, n))
+    ch = jnp.broadcast_to(cmat[:, 0].astype(jnp.float32)[:, None, :],
+                          (bsz, nh, n))
+    y, new_ssm = ssd_step(ssm_state, xs, log_a, bh, ch)
+    y = y + xh * p["d_skip"][:, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = L.norm_fwd(p["norm_y"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    return out, (new_conv, new_ssm)
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype)
+    ssm = jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32)
+    return conv, ssm

@@ -1,0 +1,153 @@
+"""Unified decoder-only transformer LM (dense / GQA / MoE / VLM-backbone).
+
+Covers chameleon-34b (qk-norm, early-fusion vocab), arctic-480b and
+qwen2-moe-a2.7b (MoE FFN variants), internlm2-20b, qwen2-72b (QKV bias),
+granite-3-8b, glm4-9b. Layers are stacked and scanned (HLO size O(1) in
+depth; remat per layer); prefill/decode thread the stacked KV cache through
+the same scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+def _param_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_layer(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "ln1": L.init_norm(cfg),
+        "attn": A.init_attention(k1, cfg, dtype),
+        "ln2": L.init_norm(cfg),
+    }
+    if cfg.family == "moe":
+        p["ffn"] = M.init_moe(k2, cfg, dtype)
+    else:
+        p["ffn"] = L.init_mlp(k2, cfg, dtype=dtype)
+    return p
+
+
+def init_params(rng, cfg):
+    dtype = _param_dtype(cfg)
+    ke, kl = jax.random.split(rng)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "layers": layers,
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _ffn_fwd(p, x, cfg, impl):
+    if cfg.family == "moe":
+        return M.moe_ffn(p, x, cfg, impl=impl)
+    return L.mlp_fwd(p, x, cfg, impl=impl)
+
+
+def _layer_fwd(lp, x, cfg, impl):
+    h = L.norm_fwd(lp["ln1"], x, cfg.norm_eps)
+    x = x + A.attention_fwd(lp["attn"], h, cfg, impl=impl)
+    x = shard(x, "batch", "seq")
+    h = L.norm_fwd(lp["ln2"], x, cfg.norm_eps)
+    x = x + _ffn_fwd(lp["ffn"], h, cfg, impl)
+    return shard(x, "batch", "seq")
+
+
+def forward(params, tokens, cfg, impl: str = "auto"):
+    """tokens: [B, S] -> logits [B, S, V_padded]."""
+    x = L.embed_fwd(params["embed"], tokens).astype(_param_dtype(cfg))
+    x = shard(x, "batch", "seq")
+
+    def body(carry, lp):
+        return _layer_fwd(lp, carry, cfg, impl), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg, impl: str = "auto"):
+    logits = forward(params, batch["tokens"], cfg, impl=impl)
+    return L.cross_entropy(logits, batch["targets"], cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode through the same layer scan
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = dtype or (jnp.bfloat16 if cfg.dtype == "bfloat16"
+                      else jnp.float32)
+    return A.init_cache(cfg, batch, max_len, dtype)
+
+
+def _cache_xs(cache):
+    return {k: v for k, v in cache.items() if k != "pos"}
+
+
+def prefill(params, tokens, cfg, cache, impl: str = "auto"):
+    """tokens: [B, S] -> (last-position logits [B, V], filled cache)."""
+    b, s = tokens.shape
+    x = L.embed_fwd(params["embed"], tokens).astype(_param_dtype(cfg))
+
+    def body(carry, inp):
+        lp, lc = inp
+        h = L.norm_fwd(lp["ln1"], carry, cfg.norm_eps)
+        att, new_lc = A.attention_prefill(lp["attn"], h, cfg, lc, impl=impl)
+        x1 = carry + att
+        h2 = L.norm_fwd(lp["ln2"], x1, cfg.norm_eps)
+        x2 = x1 + _ffn_fwd(lp["ffn"], h2, cfg, impl)
+        return shard(x2, "batch", "seq"), new_lc
+
+    x, new_kv = L.maybe_scan(body, x, (params["layers"], _cache_xs(cache)),
+                             cfg.scan_layers)
+    x = L.norm_fwd(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
+    new_cache = dict(new_kv)
+    new_cache["pos"] = jnp.full((b,), s, jnp.int32)
+    return logits, new_cache
+
+
+def decode_step(params, token, cfg, cache, impl: str = "auto"):
+    """token: [B] int32 -> (logits [B, V], cache advanced by one)."""
+    pos = cache["pos"]
+    x = L.embed_fwd(params["embed"], token[:, None]).astype(_param_dtype(cfg))
+
+    def body(carry, inp):
+        lp, lc = inp
+        h = L.norm_fwd(lp["ln1"], carry, cfg.norm_eps)
+        att, new_lc = A.attention_decode(lp["attn"], h, cfg, lc, pos,
+                                         impl=impl)
+        x1 = carry + att
+        h2 = L.norm_fwd(lp["ln2"], x1, cfg.norm_eps)
+        x2 = x1 + _ffn_fwd(lp["ffn"], h2, cfg, impl)
+        return x2, new_lc
+
+    x, new_kv = L.maybe_scan(body, x, (params["layers"], _cache_xs(cache)),
+                             cfg.scan_layers)
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
+    new_cache = dict(new_kv)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,352 @@
+"""xLSTM-1.3B: alternating mLSTM / sLSTM blocks (arXiv:2405.04517).
+
+Structure xLSTM[7:1]: every `cfg.xlstm_slstm_every`-th block is an sLSTM,
+the rest are mLSTM. Layers are organised into super-blocks of
+(every-1 mLSTM + 1 sLSTM) so the whole stack is two nested scans over
+homogeneous stacked params.
+
+mLSTM (matrix memory): C_t = f_t C_{t-1} + i_t k_t v_t^T, n_t = f_t n_{t-1}
++ i_t k_t, h = (C_t q_t) / max(|n_t . q_t|, 1). The training path reuses the
+chunkwise SSD core (per-head B=k, C=q, decay=log sigmoid(f)) with v augmented
+by a ones-column so the normalizer n rides along as an extra value channel.
+The decode path implements the exact stabilized recurrence (running max m_t);
+the two agree in exact arithmetic (tested to f32 tolerance). The exponential
+input gate is clamped (log i <= EXP_CLAMP) identically in both paths.
+
+sLSTM (scalar memory): recurrent gates with block-diagonal per-head R
+matrices, stabilized exponential gating, followed by the paper's
+post-up-projection GeGLU FFN (factor 4/3). Sequential lax.scan over time —
+inherently recurrent (this is the arch family whose O(1) state makes the
+long_500k cell feasible).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.axllm_linear import linear
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import ssm as S
+
+EXP_CLAMP = 10.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    di = 2 * cfg.d_model                 # up-projection factor 2
+    nh = cfg.n_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+def init_mlstm(rng, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, nh, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(rng, 7)
+    return {
+        "ln": L.init_norm(cfg, d),
+        "up": L.init_linear(ks[0], d, 2 * di, dtype),        # [x_in, z-gate]
+        "conv_w": L.truncated_normal(ks[1], (cfg.ssm_conv, di), 0.2, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": L.init_linear(ks[2], di, di, dtype),
+        "wk": L.init_linear(ks[3], di, di, dtype),
+        "wif": L.init_linear(ks[4], di, 2 * nh, jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((nh,)),
+                                    jnp.linspace(3.0, 6.0, nh)]).astype(
+                                        jnp.float32),
+        "norm_h": L.init_norm(cfg, di),
+        "down": L.init_linear(ks[5], di, d, dtype),
+    }
+
+
+def _mlstm_gates(p, xc, nh):
+    raw = linear(xc.astype(jnp.float32), p["wif"],
+                 out_dtype=jnp.float32) + p["if_bias"]
+    log_i = jnp.minimum(raw[..., :nh], EXP_CLAMP)     # exponential input gate
+    log_f = jax.nn.log_sigmoid(raw[..., nh:])          # sigmoid forget gate
+    return log_i, log_f
+
+
+def mlstm_fwd(p, x, cfg, state=None, *, return_state: bool = False):
+    """x: [B, S, d] -> [B, S, d] (chunkwise-parallel training form)."""
+    b, s, d = x.shape
+    di, nh, hd = _mlstm_dims(cfg)
+    xn = L.norm_fwd(p["ln"], x, cfg.norm_eps)
+    xin, z = jnp.split(linear(xn, p["up"]), 2, axis=-1)
+    conv_prev = state[0] if state is not None else None
+    xc, new_conv = S._causal_conv(xin, p["conv_w"], p["conv_b"], conv_prev)
+    q = linear(xc, p["wq"]).reshape(b, s, nh, hd)
+    k = linear(xc, p["wk"]).reshape(b, s, nh, hd)
+    v = xin.reshape(b, s, nh, hd)
+    log_i, log_f = _mlstm_gates(p, xc, nh)             # [B,S,H]
+
+    # v augmented with ones so the normalizer n = sum decayed i*k rides along
+    vf = v.astype(jnp.float32) * jnp.exp(log_i)[..., None]
+    v_aug = jnp.concatenate([vf, jnp.exp(log_i)[..., None]], axis=-1)
+    kf = k.astype(jnp.float32) / (hd ** 0.5)
+    qf = q.astype(jnp.float32)
+    y_aug, h_t = S.ssd_chunked(v_aug, log_f, kf, qf)   # [B,S,H,hd+1]
+    y, nq = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(nq), 1.0)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = L.norm_fwd(p["norm_h"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = linear(y, p["down"])
+    out = shard(out, "batch", "seq")
+    if return_state:
+        # SSD state is [B,H,P=v,N=k]; the step path keeps [B,H,k,v] with the
+        # stabilizer m (relative, so m=0 is valid for a fresh conversion)
+        c_aug = h_t.swapaxes(-1, -2)
+        return out, (new_conv, c_aug, jnp.zeros((b, nh), jnp.float32))
+    return out
+
+
+def mlstm_step(p, x, cfg, state):
+    """Exact stabilized recurrence for one token. state = (conv, C_aug, m)
+    with C_aug: [B, H, hd, hd+1] holding [C | n] columns, scaled by
+    exp(-m)."""
+    b, _, d = x.shape
+    di, nh, hd = _mlstm_dims(cfg)
+    conv_prev, c_aug, m = state
+    xn = L.norm_fwd(p["ln"], x, cfg.norm_eps)
+    xin, z = jnp.split(linear(xn, p["up"]), 2, axis=-1)
+    xc, new_conv = S._causal_conv(xin, p["conv_w"], p["conv_b"], conv_prev)
+    q = linear(xc, p["wq"]).reshape(b, nh, hd)
+    k = linear(xc, p["wk"]).reshape(b, nh, hd) / (hd ** 0.5)
+    v = xin.reshape(b, nh, hd)
+    log_i, log_f = _mlstm_gates(p, xc[:, 0], nh)       # [B,H]
+
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((b, nh, 1), jnp.float32)], -1)
+    outer = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v_aug)
+    c_new = c_aug * f_s[..., None, None] + outer * i_s[..., None, None]
+    y_aug = jnp.einsum("bhkv,bhk->bhv", c_new, q.astype(jnp.float32))
+    y, nq = y_aug[..., :hd], y_aug[..., hd]
+    # stabilized normalizer: states carry exp(-m), so the floor is exp(-m)
+    y = y / jnp.maximum(jnp.abs(nq), jnp.exp(-m_new))[..., None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.norm_fwd(p["norm_h"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = linear(y, p["down"])
+    return out, (new_conv, c_new, m_new)
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    di, nh, hd = _mlstm_dims(cfg)
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype)
+    c_aug = jnp.zeros((batch, nh, hd, hd + 1), jnp.float32)
+    m = jnp.zeros((batch, nh), jnp.float32)
+    return conv, c_aug, m
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def init_slstm(rng, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dff = ((4 * d // 3) + 63) // 64 * 64     # paper: GeGLU factor 4/3
+    ks = jax.random.split(rng, 5)
+    return {
+        "ln": L.init_norm(cfg, d),
+        "wx": L.init_linear(ks[0], d, 4 * d, dtype),         # i,f,z,o gates
+        "r": L.truncated_normal(ks[1], (nh, hd, 4 * hd),
+                                1.0 / jnp.sqrt(hd).astype(jnp.float32),
+                                dtype),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.ones((d,)),                # i, f
+             jnp.zeros((2 * d,))]).astype(jnp.float32),      # z, o
+        "norm_h": L.init_norm(cfg, d),
+        "ln_ff": L.init_norm(cfg, d),
+        "ff_gate": L.init_linear(ks[2], d, dff, dtype),
+        "ff_up": L.init_linear(ks[4], d, dff, dtype),
+        "ff_down": L.init_linear(ks[3], dff, d, dtype),
+    }
+
+
+def _slstm_cell(p, gx_t, state, nh, hd):
+    """One sLSTM step. gx_t: [B, 4d] pre-activations from the input path."""
+    c, n, h, m = state                                  # [B, d]x3, [B, d]
+    b = gx_t.shape[0]
+    d = nh * hd
+    hh = h.reshape(b, nh, hd)
+    gr = jnp.einsum("bhk,hkj->bhj", hh, p["r"].astype(h.dtype))  # [B,H,4hd]
+    gr = gr.reshape(b, nh, 4, hd).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    g = gx_t + gr + p["gate_bias"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    log_i = jnp.minimum(gi, EXP_CLAMP)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(gz)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_fwd(p, x, cfg, state=None, *, return_state: bool = False):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    xn = L.norm_fwd(p["ln"], x, cfg.norm_eps)
+    gx = linear(xn.astype(jnp.float32), p["wx"], out_dtype=jnp.float32)
+    if state is None:
+        state = init_slstm_state(cfg, b)
+
+    def step(carry, gx_t):
+        return _slstm_cell(p, gx_t, carry, nh, hd)
+
+    new_state, hs = jax.lax.scan(step, state, gx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)            # [B, S, d]
+    y = L.norm_fwd(p["norm_h"], y, cfg.norm_eps)
+    x = x + y
+    hn = L.norm_fwd(p["ln_ff"], x, cfg.norm_eps)
+    ff = jax.nn.gelu(linear(hn, p["ff_gate"])) * linear(hn, p["ff_up"])
+    x = x + linear(ff, p["ff_down"])
+    if return_state:
+        return x, new_state
+    return x
+
+
+def slstm_step(p, x, cfg, state):
+    out, new_state = slstm_fwd(p, x, cfg, state, return_state=True)
+    return out, new_state
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.zeros((batch, d), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Full model: super-block scan
+# ---------------------------------------------------------------------------
+
+def _superblock_counts(cfg) -> Tuple[int, int]:
+    every = cfg.xlstm_slstm_every or (cfg.n_layers + 1)
+    if cfg.xlstm_slstm_every:
+        assert cfg.n_layers % every == 0, "n_layers must divide into superblocks"
+        return cfg.n_layers // every, every - 1          # (n_super, m_per_super)
+    return 1, cfg.n_layers
+
+
+def init_params(rng, cfg):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    n_super, m_per = _superblock_counts(cfg)
+    ke, km, ks = jax.random.split(rng, 3)
+    mkeys = jax.random.split(km, n_super * m_per).reshape(n_super, m_per, -1)
+    skeys = jax.random.split(ks, n_super)
+    mlstm = jax.vmap(jax.vmap(lambda k: init_mlstm(k, cfg, dtype)))(mkeys)
+    slstm = jax.vmap(lambda k: init_slstm(k, cfg, dtype))(skeys)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "mlstm": mlstm,                                  # [n_super, m_per, ...]
+        "slstm": slstm,                                  # [n_super, ...]
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def forward(params, tokens, cfg, impl: str = "auto"):
+    x = L.embed_fwd(params["embed"], tokens)
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+    def m_body(carry, mp):
+        return carry + mlstm_fwd(mp, carry, cfg), None
+
+    def super_body(carry, inp):
+        mp, sp = inp
+        body = jax.checkpoint(m_body, prevent_cse=False) if cfg.remat \
+            else m_body
+        carry, _ = L.maybe_scan(body, carry, mp, cfg.scan_layers)
+        carry = slstm_fwd(sp, carry, cfg)
+        return carry, None
+
+    x, _ = L.maybe_scan(super_body, x,
+                        (params["mlstm"], params["slstm"]), cfg.scan_layers)
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg, impl: str = "auto"):
+    logits = forward(params, batch["tokens"], cfg, impl=impl)
+    return L.cross_entropy(logits, batch["targets"], cfg.vocab_size)
+
+
+def init_cache(cfg, batch: int, max_len: int = 0, dtype=None):
+    """Recurrent state only — O(1) in sequence length (the long_500k story)."""
+    n_super, m_per = _superblock_counts(cfg)
+    dtype = dtype or (jnp.bfloat16 if cfg.dtype == "bfloat16"
+                      else jnp.float32)
+
+    def stack(tree, n):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    m_state = stack(stack(init_mlstm_state(cfg, batch, dtype), m_per),
+                    n_super)
+    s_state = stack(init_slstm_state(cfg, batch), n_super)
+    return {"mlstm": m_state, "slstm": s_state,
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params, token, cfg, cache, impl: str = "auto"):
+    x = L.embed_fwd(params["embed"], token[:, None])
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+    def m_body(carry, inp):
+        mp, ms = inp
+        out, new_ms = mlstm_step(mp, carry, cfg, ms)
+        return carry + out, new_ms
+
+    def super_body(carry, inp):
+        mp, sp, ms, ss = inp
+        carry, new_ms = L.maybe_scan(m_body, carry, (mp, ms),
+                                     cfg.scan_layers)
+        carry, new_ss = slstm_step(sp, carry, cfg, ss)
+        return carry, (new_ms, new_ss)
+
+    x, (new_m, new_s) = L.maybe_scan(
+        super_body, x,
+        (params["mlstm"], params["slstm"], cache["mlstm"], cache["slstm"]),
+        cfg.scan_layers)
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
+    return logits, {"mlstm": new_m, "slstm": new_s, "pos": cache["pos"] + 1}
+
+
+def prefill(params, tokens, cfg, cache, impl: str = "auto"):
+    """Parallel prefill: chunkwise mLSTM + sequential sLSTM over the prompt,
+    emitting every block's recurrent state for subsequent decode."""
+    b, s = tokens.shape
+    x = L.embed_fwd(params["embed"], tokens)
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+    def m_body(carry, mp):
+        out, st = mlstm_fwd(mp, carry, cfg, return_state=True)
+        return carry + out, st
+
+    def super_body(carry, inp):
+        mp, sp = inp
+        carry, m_states = L.maybe_scan(m_body, carry, mp, cfg.scan_layers)
+        carry, s_state = slstm_fwd(sp, carry, cfg, return_state=True)
+        return carry, (m_states, s_state)
+
+    x, (m_states, s_states) = L.maybe_scan(
+        super_body, x, (params["mlstm"], params["slstm"]), cfg.scan_layers)
+    x = L.norm_fwd(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
+    return logits, {"mlstm": m_states, "slstm": s_states,
+                    "pos": jnp.full((b,), s, jnp.int32)}

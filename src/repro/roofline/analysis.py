@@ -1,0 +1,200 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (v5e constants):
+
+    compute    = FLOPs / (chips * 197e12)
+    memory     = HBM bytes / (chips * 819e9)
+    collective = collective bytes / (chips * 50e9)       (per-link ICI)
+
+Sources & corrections (EXPERIMENTS.md §Roofline methodology):
+
+* ``compiled.cost_analysis()`` is recorded VERBATIM, but XLA's HLO cost
+  analysis counts a while-loop (lax.scan) body ONCE, not trip-count times —
+  verified empirically in this container (scan vs unrolled: 8x flops gap).
+  Scan-over-layers therefore undercounts by ~n_layers.
+* Correction: each cell is additionally lowered UNROLLED at 1 and 2
+  layer-groups; per-group cost = cost(2) - cost(1); total =
+  cost(1) - delta + n_groups * delta. Exact for homogeneous stacks (all
+  assigned archs are homogeneous per group). Collective bytes get the same
+  delta treatment (they sit inside the same loops).
+* MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) + attention terms —
+  the "useful compute" yardstick; MODEL_FLOPS / HLO_FLOPs(corrected) is the
+  waste ratio (remat recompute, dequant overhead, dispatch).
+* Collective bytes: parsed from post-SPMD ``compiled.as_text()`` — shapes in
+  partitioned HLO are per-device, so summed operand bytes approximate
+  per-chip link traffic; all-reduce counts 2x (reduce-scatter + all-gather
+  phases of a ring).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """bytes of 'bf16[16,512]{1,0}' or tuple '(f32[8,2], f32[8,2])'."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum per-op output bytes by collective kind (post-SPMD per-device
+    shapes). all-reduce doubles (RS+AG ring phases)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            b *= 2.0
+        d = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += b
+    return out
+
+
+def total_collective_bytes(coll: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["bytes"] for v in coll.values())
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca) if ca else {}
+
+
+def memory_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def extrapolate(cost1: float, cost2: float, n_groups: int) -> float:
+    """cost(1 group), cost(2 groups) -> cost(n_groups) for homogeneous
+    stacks: base + n * delta."""
+    delta = cost2 - cost1
+    base = cost1 - delta
+    return base + n_groups * delta
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape_kind: str, seq: int, global_batch: int) -> float:
+    """6·N·D (+ attention 12·L·d_head·H·S per token, causal halved) —
+    training counts fwd+bwd (3x fwd); decode counts one token."""
+    n_active = cfg.n_active_params()
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hk, l = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+
+    def attn_flops_per_token(kv_len):
+        # qk and pv per layer; causal average kv_len/2 during prefill
+        return l * (2 * h * hd * kv_len + 2 * h * hd * kv_len)
+
+    if shape_kind == "train":
+        tokens = seq * global_batch
+        fwd = 2 * n_active * tokens + tokens * attn_flops_per_token(seq / 2)
+        return 3 * fwd                      # fwd + 2x bwd
+    if shape_kind == "prefill":
+        tokens = seq * global_batch
+        return 2 * n_active * tokens + tokens * attn_flops_per_token(seq / 2)
+    # decode: one token against a seq-length cache
+    tokens = global_batch
+    kv = seq if cfg.family not in ("ssm",) else cfg.ssm_state
+    return 2 * n_active * tokens + tokens * attn_flops_per_token(kv)
+
+
+def useful_hbm_bytes(cfg, shape_kind: str, seq: int, global_batch: int,
+                     weight_bytes_per_param: float = 1.0,
+                     kv_bytes: float = 2.0) -> float:
+    """Physics floor on global HBM traffic per step: bytes the hardware MUST
+    move (each weight read once; the KV/state cache read once per decoded
+    token; activations touched a small constant number of times). The
+    reported roofline fraction is floor / HLO-estimate: how close the
+    compiled program is to this bound.
+
+    weight_bytes_per_param: 2.0 bf16 baseline, 1.0 int8 codes, 0.5 int4.
+    kv_bytes: 2.0 bf16 cache, 1.0 int8-quantized cache.
+    """
+    n_active = cfg.n_active_params()
+    l, hk, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    d = cfg.d_model
+    act_round = 12 * l * d * 2.0                      # bytes/token/pass
+
+    if shape_kind == "decode":
+        w = n_active * weight_bytes_per_param
+        if cfg.family == "ssm":
+            state = cfg.n_layers * (2 * d) * (2 * d // cfg.n_heads + 1) * 4
+            cache = global_batch * state
+        elif cfg.family == "hybrid":
+            sites = cfg.n_layers // max(cfg.hybrid_attn_every, 1)
+            cache = global_batch * (
+                sites * 2 * seq * hk * hd * kv_bytes
+                + cfg.n_layers * 2 * d * cfg.ssm_state * 4)
+        else:
+            cache = global_batch * 2 * l * seq * hk * hd * kv_bytes
+        return w + cache + global_batch * act_round
+    if shape_kind == "prefill":
+        tokens = seq * global_batch
+        w = n_active * weight_bytes_per_param
+        kv_write = global_batch * 2 * l * seq * hk * hd * kv_bytes \
+            if cfg.family not in ("ssm",) else 0.0
+        return w + tokens * act_round + kv_write
+    # train: per optimizer step
+    tokens = seq * global_batch
+    accum = max(cfg.grad_accum, 1)
+    w_bytes = cfg.n_params() * 2.0                    # bf16 compute params
+    opt_bytes = cfg.n_params() * (4.0 if not cfg.int8_optimizer else 10.0)
+    grads = cfg.n_params() * 4.0
+    # weights re-read fwd+bwd per microbatch; activations 3 passes w/ remat
+    return (2 * accum * w_bytes + grads + opt_bytes
+            + 3 * tokens * act_round)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict:
+    comp = flops / (chips * PEAK_FLOPS)
+    mem = hbm_bytes / (chips * HBM_BW)
+    coll = coll_bytes / (chips * LINK_BW)
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda kv: kv[1])
+    return {"compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "dominant": dom[0],
+            "bound_step_s": max(comp, mem, coll)}

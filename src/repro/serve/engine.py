@@ -1,0 +1,158 @@
+"""Batched serving engine with slot-based continuous batching (lite).
+
+The AxLLM deployment surface: `ServeEngine(..., quantize=True)` converts the
+trained params post-training (zero setup, paper §I) to int8 codes and every
+linear runs through the fused dequant-matmul path. Decoding is batched across
+`n_slots` request slots; finished slots are freed and refilled from the
+queue. Prefill runs per-wave (all pending requests padded to a common length)
+and is written into the batched cache slot-wise; decode advances all active
+slots one token per `step()`.
+
+Slot insertion handles any cache pytree: every array whose dim-k equals
+n_slots at the engine's recorded batch axis is written at that axis (cache
+layouts put batch right after the stacked-layer leading dims; we detect the
+axis once from init_cache shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.axllm_linear import deploy_quantize
+from repro.core.quantization import QuantConfig
+from repro.models.model import ModelAPI, get_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 32
+    tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _batch_axis_of(shape, n_slots, max_len):
+    """First axis equal to n_slots (skipping stacked-layer leading dims that
+    could coincide is resolved by preferring the axis whose next dim is
+    max_len when present)."""
+    cands = [i for i, d in enumerate(shape) if d == n_slots]
+    if not cands:
+        return None
+    for i in cands:
+        if i + 1 < len(shape) and shape[i + 1] == max_len:
+            return i
+    return cands[0]
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 512,
+                 quantize: bool = False, quant_bits: int = 8,
+                 impl: str = "auto", greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.api: ModelAPI = get_model(cfg, impl=impl)
+        if quantize:
+            params = deploy_quantize(
+                params, QuantConfig(bits=quant_bits, mode="affine",
+                                    granularity="per_channel"))
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.rng = jax.random.PRNGKey(seed)
+        self.cache = self.api.init_cache(n_slots, max_len)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._rid = 0
+        self._decode = jax.jit(self.api.decode)
+        self._prefill_cache = {}
+
+    # -- request management ---------------------------------------------------
+    def submit(self, prompt, max_new: int = 32) -> int:
+        req = Request(self._rid, np.asarray(prompt, np.int32), max_new)
+        self._rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _free_slots(self):
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    # -- prefill wave ----------------------------------------------------------
+    def _admit(self):
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        # one wave = equal-length prompts (exact positions without padding
+        # bookkeeping; mixed lengths wait for the next wave)
+        length = len(self.queue[0].prompt)
+        wave = [r for r in self.queue if len(r.prompt) == length][: len(free)]
+        for r in wave:
+            self.queue.remove(r)
+        toks = np.stack([r.prompt for r in wave])
+        wave_cache = self.api.init_cache(len(wave), self.max_len)
+        logits, wave_cache = self.api.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, wave_cache)
+        first = self._sample(logits)
+        for i, r in enumerate(wave):
+            slot = free[i]
+            self.slots[slot] = r
+            r.tokens.append(int(first[i]))
+            self._write_slot(wave_cache, i, slot)
+
+    def _write_slot(self, wave_cache, src: int, dst: int):
+        def put(full, one):
+            ax = _batch_axis_of(full.shape, self.n_slots, self.max_len)
+            if ax is None:
+                return full
+            # the wave cache has the wave size at the same axis
+            src_slice = jax.lax.index_in_dim(one, src, ax, keepdims=False)
+            idx = (slice(None),) * ax + (dst,)
+            return full.at[idx].set(src_slice.astype(full.dtype))
+        self.cache = jax.tree_util.tree_map(put, self.cache, wave_cache)
+
+    def _sample(self, logits):
+        logits = logits[:, : self.cfg.vocab_size]
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, -1))
+        self.rng, k = jax.random.split(self.rng)
+        return np.asarray(jax.random.categorical(k, logits))
+
+    # -- decode ----------------------------------------------------------------
+    def step(self):
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return False
+        last = np.zeros((self.n_slots,), np.int32)
+        for i in active:
+            last[i] = self.slots[i].tokens[-1]
+        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                          self.cache)
+        nxt = self._sample(logits)
+        for i in active:
+            r = self.slots[i]
+            r.tokens.append(int(nxt[i]))
+            if len(r.tokens) >= r.max_new:
+                r.done = True
+                self.finished.append(r)
+                self.slots[i] = None
+        return True
+
+    def run(self, max_steps: int = 10000):
+        while (self.queue or any(self.slots)) and max_steps > 0:
+            self.step()
+            max_steps -= 1
+        return self.finished
+
+    def generate(self, prompts, max_new: int = 32):
+        ids = [self.submit(p, max_new) for p in prompts]
+        self.run()
+        by_id = {r.rid: r for r in self.finished}
+        return [by_id[i].tokens for i in ids]

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests / benches must see ONE device — the 512-device override is
+# exclusively the dry-run's (set inside repro.launch.dryrun, never globally)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

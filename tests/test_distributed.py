@@ -1,0 +1,278 @@
+"""Multi-device behaviour on 8 host CPU devices (subprocess per case —
+the device-count flag must be set before jax initializes, so these cannot
+run in the main test process which pins 1 device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(body: str, n: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("JAX_PLATFORMS", None)
+    script = "import jax, jax.numpy as jnp, numpy as np\n" + \
+        textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_train_step_runs():
+    run_devices("""
+    from jax.sharding import Mesh
+    from repro.configs.base import ModelConfig
+    from repro.dist import sharding as shd
+    from repro.models.model import get_model, make_batch
+    from repro.optim import adamw
+    from repro.train.loop import make_train_step
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, dtype="float32",
+                      grad_accum=2)
+    api = get_model(cfg)
+    with shd.activate(mesh):
+        params = api.init(jax.random.PRNGKey(0))
+        specs = shd.param_specs(params, mesh)
+        params = jax.tree_util.tree_map(jax.device_put, params, specs)
+        ocfg = adamw.AdamWConfig(lr=1e-3)
+        opt = adamw.init(params, ocfg)
+        step = jax.jit(make_train_step(api, ocfg))
+        batch = make_batch(cfg, 0, 8, 32)
+        from repro.data.pipeline import shard_batch
+        batch = shard_batch({k: np.asarray(v) for k, v in batch.items()},
+                            mesh)
+        p2, o2, m = step(params, opt, batch, 0)
+        assert bool(jnp.isfinite(m["loss"])), m
+        # weights really are distributed
+        w = p2["layers"]["ffn"]["gate"]
+        assert len(w.sharding.device_set) > 1
+    print("OK sharded train", float(m["loss"]))
+    """)
+
+
+def test_elastic_checkpoint_reshard():
+    run_devices("""
+    import tempfile
+    from repro.configs.base import ModelConfig
+    from repro.dist import sharding as shd
+    from repro.models.model import get_model
+    from repro.train import checkpoint as C
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, dtype="float32")
+    api = get_model(cfg)
+    mesh_a = jax.make_mesh((2, 2), ("data", "model"),
+                           devices=jax.devices()[:4])
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"))
+    params = api.init(jax.random.PRNGKey(0))
+    specs_a = shd.param_specs(params, mesh_a)
+    params_a = jax.tree_util.tree_map(jax.device_put, params, specs_a)
+    with tempfile.TemporaryDirectory() as d:
+        C.save(d, 5, params_a)
+        specs_b = shd.param_specs(params, mesh_b)
+        restored, step = C.restore(d, params, shardings=specs_b)
+        assert step == 5
+        for a, b in zip(jax.tree_util.tree_leaves(params_a),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # restored on the BIGGER mesh
+        w = restored["layers"]["ffn"]["gate"]
+        assert len(w.sharding.device_set) > 4
+    print("OK elastic reshard")
+    """)
+
+
+def test_compressed_allreduce():
+    run_devices("""
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compression import compressed_allreduce_mean, wire_bytes
+
+    mesh = jax.make_mesh((8,), ("pod",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024)) * \
+        (1 + jnp.arange(8)[:, None]).astype(jnp.float32)
+
+    @partial(shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
+    def comp_mean(xs):
+        m, err = compressed_allreduce_mean(xs[0], "pod")
+        return m[None]
+
+    exact = jnp.mean(x, axis=0)
+    approx = comp_mean(x)[0]
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02, rel
+    comp, un = wire_bytes(x[0])
+    assert comp < un / 3.5
+    print("OK compressed allreduce rel", rel)
+    """)
+
+
+def test_error_feedback_reduces_bias():
+    run_devices("""
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compression import compressed_allreduce_mean
+
+    mesh = jax.make_mesh((4,), ("pod",), devices=jax.devices()[:4])
+    g = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+
+    @partial(shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+             out_specs=(P("pod"), P("pod")))
+    def step(xs, errs):
+        m, e = compressed_allreduce_mean(xs[0], "pod", errs[0])
+        return m[None], e[None]
+
+    exact = jnp.mean(g, axis=0)
+    err = jnp.zeros_like(g)
+    # same gradient repeatedly: error feedback drives the ACCUMULATED mean
+    # toward the exact accumulated value
+    acc = jnp.zeros_like(exact)
+    acc_exact = jnp.zeros_like(exact)
+    for t in range(8):
+        m, err = step(g, err)
+        acc = acc + m[0]
+        acc_exact = acc_exact + exact
+    rel = float(jnp.linalg.norm(acc - acc_exact) /
+                jnp.linalg.norm(acc_exact))
+    assert rel < 0.005, rel
+    print("OK error feedback rel", rel)
+    """)
+
+
+def test_ring_collective_matmuls():
+    run_devices("""
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.collective_matmul import (ring_allgather_matmul,
+                                              ring_matmul_reducescatter)
+
+    mesh = jax.make_mesh((8,), ("model",))
+    B, K, N = 16, 64, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    y_ref = x @ w
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(None, "model"), P(None, "model")),
+             out_specs=P(None, "model"))
+    def ag_mm(xs, ws):
+        return ring_allgather_matmul(xs, ws, "model")
+
+    y1 = ag_mm(x, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(None, "model"), P("model")),
+             out_specs=P(None, "model"))
+    def rs_mm(xs, ws):
+        return ring_matmul_reducescatter(xs, ws, "model")
+
+    y2 = rs_mm(x, w)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    print("OK ring matmuls")
+    """)
+
+
+def test_pipeline_parallel_matches_sequential():
+    run_devices("""
+    from repro.dist.pipeline import make_pipelined_apply
+
+    mesh = jax.make_mesh((4,), ("stage",), devices=jax.devices()[:4])
+    S, D = 4, 32
+    ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) / jnp.sqrt(D)
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    n_micro = 6
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, 8, D))
+    apply = make_pipelined_apply(stage_fn, mesh, n_micro)
+    y_pipe = apply(ws, x)
+    # sequential reference
+    y_ref = x
+    for s in range(S):
+        y_ref = jnp.tanh(y_ref @ ws[s])
+    np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-5)
+    print("OK pipeline")
+    """)
+
+
+def test_mini_production_mesh_compiles_multipod_shape():
+    """2x2x2 ("pod","data","model") miniature of the 2x16x16 mesh: the full
+    512-device version runs in launch/dryrun.py; this guards the code path
+    in CI time."""
+    run_devices("""
+    from repro.configs.base import ModelConfig
+    from repro.dist import sharding as shd
+    from repro.launch import shapes as shp
+    from repro.launch.dryrun import build_cell
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, grad_accum=2)
+    spec = shp.ShapeSpec("mini_train", 64, 8, "train")
+    with shd.activate(mesh):
+        fn, args = build_cell(cfg, spec, mesh, "axllm-int8")
+        compiled = fn.lower(*args).compile()
+        ma = compiled.memory_analysis()
+        assert getattr(ma, "temp_size_in_bytes", 1) >= 0
+    spec_d = shp.ShapeSpec("mini_decode", 128, 8, "decode")
+    with shd.activate(mesh):
+        fn, args = build_cell(cfg, spec_d, mesh, "axllm-int8")
+        fn.lower(*args).compile()
+    print("OK mini multi-pod compile")
+    """)
+
+
+def test_seqsharded_decode_matches_reference():
+    """Fused shard_map decode (local cache update + flash combine) must be
+    numerically identical to the unsharded reference path."""
+    run_devices("""
+    from repro.configs.base import ModelConfig
+    from repro.dist import sharding as shd
+    from repro.models import attention as A
+    from repro.models.model import get_model, make_batch
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, dtype="float32")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 0, 4, 8)
+    # reference on 1 device, no mesh
+    cache = api.init_cache(4, 32)
+    lp_ref, cache_ref = api.prefill(params, batch, cache)
+    nxt = jnp.argmax(lp_ref[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    ld_ref, _ = api.decode(params, nxt, cache_ref)
+
+    # sharded: mesh (2 data, 4 model); kv=2 -> cache seq shards over model
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with shd.activate(mesh):
+        cache2 = api.init_cache(4, 32)
+        cspec = shd.cache_specs(jax.eval_shape(lambda: api.init_cache(4, 32)),
+                                mesh, 4, 32)
+        # sanity: the seq dim really is sharded
+        assert "model" in str(cspec["k"].spec), cspec["k"].spec
+        cache2 = jax.tree_util.tree_map(jax.device_put, cache2, cspec)
+        lp2, cache2 = jax.jit(api.prefill)(params, batch, cache2)
+        ld2, _ = jax.jit(api.decode)(params, nxt, cache2)
+    np.testing.assert_allclose(np.asarray(ld2), np.asarray(ld_ref),
+                               rtol=2e-4, atol=2e-4)
+    print("OK seq-sharded decode")
+    """)

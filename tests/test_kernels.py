@@ -1,0 +1,189 @@
+"""Pallas kernel validation: interpret-mode sweeps vs the pure-jnp oracles
+(shape x dtype x quant-mode grids per kernel)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import QuantConfig, quantize
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# axllm_matmul
+# ---------------------------------------------------------------------------
+
+MATMUL_SHAPES = [(8, 512, 256), (100, 512, 256), (128, 1024, 512),
+                 (256, 512, 1024), (1, 512, 256)]
+QUANT_CONFIGS = [
+    QuantConfig(8, "affine", "per_channel"),
+    QuantConfig(8, "affine", "per_group", group_size=128),
+    QuantConfig(8, "affine", "per_tensor"),
+    QuantConfig(8, "codebook", "per_channel"),
+    QuantConfig(4, "codebook", "per_channel", pack=True),
+    QuantConfig(4, "affine", "per_channel", pack=True),
+    QuantConfig(4, "affine", "per_channel", pack=False),
+]
+
+
+@pytest.mark.parametrize("shape", MATMUL_SHAPES)
+def test_axllm_matmul_shapes(shape):
+    m, k, n = shape
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (m, k))
+    qt = quantize(_rand(rng, (k, n)), QUANT_CONFIGS[0])
+    y_ref = ops.axllm_matmul(x, qt, impl="ref")
+    y_pal = ops.axllm_matmul(x, qt, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("qcfg", QUANT_CONFIGS,
+                         ids=lambda c: f"{c.bits}b-{c.mode}-{c.granularity}"
+                         f"{'-packed' if c.pack and c.bits == 4 else ''}")
+def test_axllm_matmul_quant_modes(qcfg):
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (64, 512))
+    qt = quantize(_rand(rng, (512, 256)), qcfg)
+    y_ref = ops.axllm_matmul(x, qt, impl="ref")
+    y_pal = ops.axllm_matmul(x, qt, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_axllm_matmul_dtypes(dtype):
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (32, 512), dtype)
+    qt = quantize(_rand(rng, (512, 256)), QUANT_CONFIGS[0])
+    y_ref = ops.axllm_matmul(x, qt, impl="ref")
+    y_pal = ops.axllm_matmul(x, qt, impl="pallas_interpret")
+    assert y_pal.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_axllm_matmul_leading_batch_dims():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (2, 16, 512))
+    qt = quantize(_rand(rng, (512, 256)), QUANT_CONFIGS[0])
+    y = ops.axllm_matmul(x, qt, impl="pallas_interpret")
+    assert y.shape == (2, 16, 256)
+
+
+def test_lora_matmul_matches_ref():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (16, 512))
+    qt = quantize(_rand(rng, (512, 256)), QUANT_CONFIGS[0])
+    a = _rand(rng, (512, 8))
+    b = _rand(rng, (8, 256))
+    y1 = ops.lora_matmul(x, qt, a, b, 2.0, impl="ref")
+    y2 = ops.lora_matmul(x, qt, a, b, 2.0, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, Sq, Sk, H, Hk, d, causal)
+    (2, 256, 256, 4, 4, 64, True),
+    (2, 256, 512, 8, 2, 64, True),      # GQA + longer KV
+    (1, 512, 512, 4, 1, 128, True),     # MQA
+    (2, 256, 256, 4, 4, 64, False),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_vs_oracle(case):
+    b, sq, sk, h, hk, d, causal = case
+    rng = np.random.default_rng(5)
+    q = _rand(rng, (b, sq, h, d))
+    k = _rand(rng, (b, sk, hk, d))
+    v = _rand(rng, (b, sk, hk, d))
+    o_ref = ref.attention_ref(q, k, v, causal=causal)
+    o_pal = ops.flash_attention(q, k, v, causal=causal,
+                                impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_oracle_matches_dense():
+    rng = np.random.default_rng(6)
+    q = _rand(rng, (2, 200, 4, 32))
+    k = _rand(rng, (2, 300, 2, 32))
+    v = _rand(rng, (2, 300, 2, 32))
+    for causal in (True, False):
+        o1 = ref.attention_ref(q, k, v, causal=causal)
+        o2 = ref.chunked_attention_ref(q, k, v, causal=causal, chunk=128)
+        np.testing.assert_allclose(np.asarray(o2), np.asarray(o1),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+def _kv_quant(x):
+    s = jnp.maximum(jnp.max(jnp.abs(x), -1, keepdims=True), 1e-8) / 127.0
+    return (jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8),
+            s.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("case", [(2, 1024, 8, 2, 64), (1, 2048, 4, 4, 128),
+                                  (4, 512, 4, 1, 64)])
+def test_decode_attention_vs_oracle(case):
+    b, s, h, hk, d = case
+    rng = np.random.default_rng(7)
+    q = _rand(rng, (b, h, d))
+    kc = _rand(rng, (b, s, hk, d))
+    vc = _rand(rng, (b, s, hk, d))
+    length = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    o_ref = ref.decode_attention_ref(q, kc, vc, length)
+    o_pal = ops.decode_attention(q, kc, vc, length, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_int8_kv():
+    rng = np.random.default_rng(8)
+    b, s, h, hk, d = 2, 1024, 8, 2, 64
+    q = _rand(rng, (b, h, d))
+    kc = _rand(rng, (b, s, hk, d))
+    vc = _rand(rng, (b, s, hk, d))
+    kq, ks = _kv_quant(kc)
+    vq, vs = _kv_quant(vc)
+    length = jnp.asarray([700, 1024], jnp.int32)
+    o_ref = ref.decode_attention_ref(q, kq, vq, length, k_scale=ks,
+                                     v_scale=vs)
+    o_pal = ops.decode_attention(q, kq, vq, length, k_scale=ks, v_scale=vs,
+                                 impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    # int8-KV error vs exact stays small
+    o_exact = ref.decode_attention_ref(q, kc, vc, length)
+    rel = np.abs(np.asarray(o_ref) - np.asarray(o_exact)).max() \
+        / np.abs(np.asarray(o_exact)).max()
+    assert rel < 0.05
+
+
+# ---------------------------------------------------------------------------
+# quantize kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(512, 512), (1024, 256), (128, 1024)])
+def test_quantize_kernel_vs_oracle(shape):
+    rng = np.random.default_rng(9)
+    w = _rand(rng, shape)
+    c1, s1 = ops.quantize_channels(w, impl="ref")
+    c2, s2 = ops.quantize_channels(w, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)

@@ -1,0 +1,123 @@
+"""Quantization substrate: round-trip bounds, packing, codebooks, tree
+conversion (hypothesis property tests + exact checks)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quantization as Q
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@st.composite
+def weight_matrices(draw, max_dim=64):
+    n = draw(st.integers(2, max_dim))
+    m = draw(st.integers(2, max_dim)) * 2  # even for int4 packing
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, m)) * scale).astype(np.float32)
+
+
+@given(weight_matrices())
+def test_affine_roundtrip_bound(w):
+    """|deq(q(w)) - w| <= scale/2 elementwise (half-step rounding error)."""
+    cfg = Q.QuantConfig(bits=8, mode="affine", granularity="per_channel")
+    qt = Q.quantize(w, cfg)
+    deq = np.asarray(Q.dequantize(qt))
+    step = np.asarray(qt.scale) / cfg.qmax
+    assert np.all(np.abs(deq - w) <= step / 2 + 1e-6 * np.abs(w).max())
+
+
+@given(weight_matrices())
+def test_codes_within_range(w):
+    for bits in (8, 4):
+        cfg = Q.QuantConfig(bits=bits, mode="affine",
+                            granularity="per_channel", pack=False)
+        qt = Q.quantize(w, cfg)
+        codes = np.asarray(Q.decode_codes(qt))
+        assert codes.max() <= cfg.qmax and codes.min() >= -cfg.qmax
+
+
+@given(weight_matrices())
+def test_quantize_idempotent(w):
+    """Quantizing an already-quantized weight is exact (fixed point)."""
+    cfg = Q.QuantConfig(bits=8, mode="affine", granularity="per_channel")
+    deq1 = Q.dequantize(Q.quantize(w, cfg))
+    deq2 = Q.dequantize(Q.quantize(np.asarray(deq1), cfg))
+    np.testing.assert_allclose(np.asarray(deq1), np.asarray(deq2),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_int4_pack_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-8, 8, size=(16, 32)).astype(np.int8)
+    packed = Q.pack_int4(jnp.asarray(codes))
+    assert packed.shape == (16, 16) and packed.dtype == jnp.uint8
+    un = np.asarray(Q.unpack_int4(packed, 32))
+    np.testing.assert_array_equal(un, codes)
+
+
+def test_nf4_codebook_properties():
+    cb = np.asarray(Q.nf4_codebook())
+    assert cb.shape == (16,)
+    assert np.all(np.isfinite(cb))
+    assert np.max(np.abs(cb)) == pytest.approx(1.0)
+    assert 0.0 in cb  # exact zero level
+    assert np.all(np.diff(cb) > 0)  # sorted, distinct
+
+
+def test_per_group_scales_shape():
+    w = np.random.default_rng(1).standard_normal((256, 32)).astype(np.float32)
+    cfg = Q.QuantConfig(bits=8, granularity="per_group", group_size=64)
+    qt = Q.quantize(w, cfg)
+    assert qt.scale.shape == (4, 1, 32)
+    deq = np.asarray(Q.dequantize(qt))
+    assert np.abs(deq - w).max() <= np.abs(w).max() / 127 + 1e-6
+
+
+def test_stacked_layers_get_per_layer_scales():
+    """Regression: [L, in, out] stacks must NOT share scales across L
+    (broke lax.scan leading-dim consistency)."""
+    w = np.random.default_rng(2).standard_normal((3, 16, 8)).astype(np.float32)
+    qt = Q.quantize(w, Q.QuantConfig(8, "affine", "per_channel"))
+    assert qt.scale.shape == (3, 1, 8)
+    qt_t = Q.quantize(w, Q.QuantConfig(8, "affine", "per_tensor"))
+    assert qt_t.scale.shape == (3, 1, 1)
+
+
+def test_quantize_tree_predicate():
+    params = {
+        "layers": {
+            "ln1": {"scale": jnp.ones((4,))},
+            "attn": {"wq": jnp.ones((4, 4)), "wq_bias": jnp.zeros((4,))},
+            "ffn": {"gate": jnp.ones((4, 8)), "conv_w": jnp.ones((4, 4))},
+            "router": jnp.ones((4, 2)),
+        },
+        "embed": {"embedding": jnp.ones((10, 4))},
+    }
+    out = Q.quantize_tree(params, Q.QuantConfig())
+    assert isinstance(out["layers"]["attn"]["wq"], Q.QTensor)
+    assert isinstance(out["layers"]["ffn"]["gate"], Q.QTensor)
+    assert not isinstance(out["layers"]["ln1"]["scale"], Q.QTensor)
+    assert not isinstance(out["layers"]["ffn"]["conv_w"], Q.QTensor)
+    assert not isinstance(out["layers"]["router"], Q.QTensor)
+    assert not isinstance(out["embed"]["embedding"], Q.QTensor)
+    assert Q.tree_reuse_surface(out) == 4 * 4 + 4 * 8
+
+
+def test_qtensor_pytree_roundtrip():
+    w = np.random.default_rng(3).standard_normal((8, 8)).astype(np.float32)
+    qt = Q.quantize(w, Q.QuantConfig(4, "codebook", "per_channel"))
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(Q.dequantize(qt)),
+                                  np.asarray(Q.dequantize(qt2)))

@@ -1,0 +1,91 @@
+"""Reuse-rate analytics invariants (paper §III.b / Fig. 8)."""
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import reuse as R
+
+
+@st.composite
+def code_matrices(draw):
+    n = draw(st.integers(1, 32))
+    m = draw(st.integers(1, 512))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.integers(-127, 128, size=(n, m)).astype(np.int32)
+
+
+@given(code_matrices(), st.sampled_from([None, 64, 256]))
+@settings(deadline=None, max_examples=30)
+def test_rate_in_unit_interval(codes, seg):
+    r = R.reuse_rate(codes, seg)
+    assert 0.0 <= r < 1.0
+    # rate == 1 - unique/total exactly
+    uniq = R.segment_unique_counts(codes, seg).sum()
+    assert abs(r - (1 - uniq / codes.size)) < 1e-12
+
+
+@given(code_matrices())
+@settings(deadline=None, max_examples=20)
+def test_bigger_buffer_no_worse(codes):
+    """Unbounded buffers reuse at least as much as segmented ones."""
+    assert R.reuse_rate(codes, None) >= R.reuse_rate(codes, 64) - 1e-12
+
+
+def test_constant_matrix_max_reuse():
+    codes = np.full((4, 256), 7)
+    assert R.reuse_rate(codes, None) == 1 - 4 / codes.size
+
+
+def test_all_distinct_no_reuse():
+    codes = np.arange(128)[None, :]  # 128 distinct cells
+    assert R.reuse_rate(codes, None) == 0.0
+
+
+def test_sign_folding_halves_cells():
+    codes = np.concatenate([np.arange(1, 65), -np.arange(1, 65)])[None, :]
+    assert R.reuse_rate(codes, None, fold_sign=True) == 0.5
+    assert R.reuse_rate(codes, None, fold_sign=False) == 0.0
+
+
+def test_reuse_grows_with_row_length():
+    """Paper: 'the reuse rate grows with matrix size'."""
+    rng = np.random.default_rng(0)
+    rates = []
+    for m in (256, 1024, 4096):
+        w = rng.standard_normal((64, m)).astype(np.float32)
+        scale = np.abs(w).max(axis=0) / 127
+        codes = np.round(w / scale).astype(np.int32)
+        rates.append(R.reuse_rate(codes, None))
+    assert rates[0] < rates[1] < rates[2]
+
+
+def test_expected_unique_matches_empirical():
+    rng = np.random.default_rng(1)
+    seg = 256
+    w = rng.standard_normal((512, seg)).astype(np.float32)
+    scale = np.abs(w).max() / 127  # per-tensor: matches the gaussian model
+    codes = np.clip(np.round(w / scale), -127, 127).astype(np.int32)
+    emp = R.segment_unique_counts(codes, seg).mean()
+    ana = R.expected_unique(seg, 128, "gaussian")
+    assert abs(emp - ana) / ana < 0.15  # analytic within 15%
+
+
+def test_lora_row_overlap_high_for_matched_dist():
+    """Paper §V: ~90% of A's row values already occur in the W row."""
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((64, 768)).astype(np.float32)
+    a = rng.standard_normal((64, 16)).astype(np.float32)
+    wc = np.round(w / (np.abs(w).max() / 127)).astype(np.int32)
+    ac = np.round(a / (np.abs(a).max() / 127)).astype(np.int32)
+    ov = R.lora_row_overlap(wc, ac)
+    assert ov > 0.8
+
+
+def test_lora_overlap_bounds():
+    wc = np.zeros((4, 8), np.int32)
+    ac = np.zeros((4, 2), np.int32)
+    assert R.lora_row_overlap(wc, ac) == 1.0
+    ac2 = np.full((4, 2), 99, np.int32)
+    assert R.lora_row_overlap(wc, ac2) == 0.0

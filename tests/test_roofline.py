@@ -1,0 +1,102 @@
+"""Roofline analysis unit tests: HLO collective parsing, trip-count
+extrapolation, analytic MODEL_FLOPS sanity."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.roofline import analysis as ra
+
+HLO_SAMPLE = """
+  %ag = bf16[16,512]{1,0} all-gather(bf16[1,512]{1,0} %p), replica_groups=...
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %rs.1 = f32[64,32]{1,0} reduce-scatter(f32[512,32]{1,0} %y), dimensions={0}
+  %cp = u8[128]{0} collective-permute(u8[128]{0} %z), source_target_pairs=...
+  %a2a = bf16[8,8,64]{2,1,0} all-to-all(bf16[8,8,64]{2,1,0} %w), dimensions={0}
+  %ag2 = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-gather-start(f32[2,4] %q, f32[2,4] %r)
+  %not_a_collective = f32[10]{0} add(f32[10]{0} %a, f32[10]{0} %b)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    coll = ra.parse_collectives(HLO_SAMPLE)
+    assert coll["all-gather"]["count"] == 2
+    # 16*512*2 bytes + tuple (4*4*4)*2
+    assert coll["all-gather"]["bytes"] == 16 * 512 * 2 + 2 * 4 * 4 * 4
+    # all-reduce doubled (RS+AG ring phases)
+    assert coll["all-reduce"]["bytes"] == 2 * 1024 * 4
+    assert coll["reduce-scatter"]["bytes"] == 64 * 32 * 4
+    assert coll["collective-permute"]["bytes"] == 128
+    assert coll["all-to-all"]["bytes"] == 8 * 8 * 64 * 2
+    assert "add" not in coll
+
+
+def test_total_collective_bytes():
+    coll = ra.parse_collectives(HLO_SAMPLE)
+    assert ra.total_collective_bytes(coll) == sum(
+        v["bytes"] for v in coll.values())
+
+
+def test_extrapolate_linear():
+    # base=10, delta=5 -> n=48: 10-5 + 48*5? no: cost1=15, cost2=20
+    assert ra.extrapolate(15.0, 20.0, 48) == pytest.approx(10 + 48 * 5)
+    # 1-group == full model when n_groups == 1
+    assert ra.extrapolate(7.0, 9.0, 1) == pytest.approx(7.0)
+
+
+def test_roofline_terms_dominance():
+    t = ra.roofline_terms(197e12 * 256, 1e9, 1e9, 256)   # 1s compute
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == pytest.approx(1.0)
+    t = ra.roofline_terms(1e12, 819e9 * 256 * 2, 1e9, 256)
+    assert t["dominant"] == "memory"
+    assert t["memory_s"] == pytest.approx(2.0)
+    t = ra.roofline_terms(1e12, 1e9, 50e9 * 256 * 3, 256)
+    assert t["dominant"] == "collective"
+    assert t["collective_s"] == pytest.approx(3.0)
+
+
+def test_model_flops_scaling():
+    cfg = get_config("granite-3-8b")
+    f_train = ra.model_flops(cfg, "train", 4096, 256)
+    f_prefill = ra.model_flops(cfg, "prefill", 4096, 256)
+    # train = fwd + 2x bwd
+    assert f_train == pytest.approx(3 * f_prefill)
+    # decode is ~tokens-fraction of prefill compute
+    f_dec = ra.model_flops(cfg, "decode", 4096, 256)
+    assert f_dec < f_prefill / 1000
+    # dense: 6ND dominates; check order of magnitude
+    n = cfg.n_params()
+    assert f_train > 6 * n * 4096 * 256
+    assert f_train < 10 * n * 4096 * 256
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("arctic-480b")
+    f = ra.model_flops(cfg, "prefill", 1024, 1)
+    n_active = cfg.n_active_params()
+    assert f < 2 * cfg.n_params() * 1024 * 0.2   # far below dense-equivalent
+    assert f > 2 * n_active * 1024               # at least active matmuls
+
+
+def test_shape_bytes_parsing():
+    assert ra._shape_bytes("bf16[16,512]{1,0}") == 16 * 512 * 2
+    assert ra._shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert ra._shape_bytes("u4[100]") == 50
+    assert ra._shape_bytes("pred[8]") == 8
+
+
+def test_useful_bytes_floor_sane():
+    cfg = get_config("qwen2-72b")
+    # decode: KV cache dominates at 32k x batch 128 (bf16)
+    b = ra.useful_hbm_bytes(cfg, "decode", 32768, 128,
+                            weight_bytes_per_param=1.0)
+    kv = 128 * 2 * 80 * 32768 * 8 * 128 * 2
+    assert b > kv and b < kv * 1.5
+    # int8 KV halves the floor's cache share
+    b8 = ra.useful_hbm_bytes(cfg, "decode", 32768, 128,
+                             weight_bytes_per_param=1.0, kv_bytes=1.0)
+    assert b8 < b * 0.6
+    # ssm decode floor is tiny (state, not KV)
+    x = get_config("xlstm-1.3b")
+    bx = ra.useful_hbm_bytes(x, "decode", 524288, 1)
+    assert bx < 3 * x.n_params()  # weights dominate, no 500k cache

@@ -1,0 +1,75 @@
+"""Serving engine: batched continuous decoding, AxLLM-quantized parity,
+int8 KV cache, slot reuse."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.model import get_model
+from repro.serve.engine import ServeEngine
+
+CFG = ModelConfig(name="s", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, vocab_pad_multiple=64, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def test_batched_equals_single_request(params):
+    """Greedy decode of a request must not depend on its batch-mates."""
+    p1 = np.arange(8)
+    p2 = np.arange(8) + 100
+    eng_b = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    outs = eng_b.generate([p1, p2], max_new=8)
+    eng_s = ServeEngine(CFG, params, n_slots=1, max_len=64)
+    solo = eng_s.generate([p1], max_new=8)
+    assert outs[0] == solo[0]
+
+
+def test_slot_reuse_more_requests_than_slots(params):
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    prompts = [np.arange(6) + i for i in range(5)]
+    outs = eng.generate(prompts, max_new=5)
+    assert len(outs) == 5
+    assert all(len(o) == 5 for o in outs)
+
+
+def test_quantized_engine_mostly_agrees(params):
+    prompts = [np.arange(8), np.arange(8) + 50]
+    fp = ServeEngine(CFG, params, n_slots=2, max_len=64).generate(
+        prompts, max_new=8)
+    q = ServeEngine(CFG, params, n_slots=2, max_len=64,
+                    quantize=True).generate(prompts, max_new=8)
+    agree = np.mean([a == b for A, B in zip(fp, q) for a, b in zip(A, B)])
+    assert agree >= 0.5  # random-init model; trained models agree ~fully
+
+
+def test_int8_kv_cache_engine(params):
+    import dataclasses
+    cfg = dataclasses.replace(CFG, quant_kv=True)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=64, quantize=True)
+    outs = eng.generate([np.arange(8)], max_new=6)
+    assert len(outs[0]) == 6
+
+
+def test_mixed_length_prompts_wave_grouping(params):
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=64)
+    prompts = [np.arange(4), np.arange(8), np.arange(4) + 9,
+               np.arange(8) + 3]
+    outs = eng.generate(prompts, max_new=4)
+    assert len(outs) == 4 and all(len(o) == 4 for o in outs)
+
+
+def test_engine_on_recurrent_family():
+    cfg = ModelConfig(name="sx", family="ssm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+                      vocab_pad_multiple=64, xlstm_slstm_every=2,
+                      dtype="float32", remat=False)
+    p = get_model(cfg).init(jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, p, n_slots=2, max_len=64, quantize=True)
+    outs = eng.generate([np.arange(6), np.arange(6) + 2], max_new=5)
+    assert all(len(o) == 5 for o in outs)
