@@ -259,7 +259,11 @@ def simulate_matrix(codes: np.ndarray, cfg: SimConfig = SimConfig(),
     """
     cells = reuse_lib.fold_codes(codes, cfg.fold_sign)
     n, m = cells.shape
-    uniq = reuse_lib.segment_unique_counts(cells, cfg.buf, fold_sign=False)
+    # count uniques on the RAW codes with the configured fold — `cells` is
+    # already folded, so folding it again (fold_sign=False adds the +128
+    # offset a second time) would push cells past the 256-index bound
+    uniq = reuse_lib.segment_unique_counts(codes, cfg.buf,
+                                           fold_sign=cfg.fold_sign)
     n_seg = uniq.shape[1]
 
     report = _empty_report()

@@ -1,0 +1,12 @@
+"""Distributed substrate: logical-axis sharding, compressed cross-pod
+gradient exchange, ring collective matmuls, and stage pipelining.
+
+Modules (each maps to a ROADMAP scaling lever — see README.md here):
+  sharding          logical-name -> mesh-axis rule translation + contexts
+  compression       int8 error-feedback allreduce for the DCN "pod" axis
+  collective_matmul ring all-gather / reduce-scatter matmuls (comm/compute
+                    overlap for TP weight shards)
+  pipeline          GPipe-style microbatch stage parallelism
+"""
+
+from repro.dist import sharding  # noqa: F401

@@ -1,0 +1,80 @@
+"""Ring collective matmuls: overlap TP communication with MXU compute.
+
+Under plain GSPMD a TP matmul lowers to all-gather-then-matmul (or
+matmul-then-reduce-scatter): the collective serializes against the
+contraction. The ring forms below split the contraction into one block
+per shard and alternate matmul-block / ppermute-block, so each hop's
+transfer hides behind the previous block's compute (the Wang et al.
+"collective matmul" / TPU overlapped-AG pattern; see also the Pallas
+ring-collective idiom in kernels/).
+
+Both functions run INSIDE shard_map over `axis_name` and are numerically
+equal to the dense x @ w (fp32 tolerance — identical per-block dots,
+different summation order for the reduce-scatter form).
+
+  ring_allgather_matmul      x:[B, K/p]  w:[K, N/p]  -> y:[B, N/p]
+    (x is column-sharded; instead of all-gathering x up front, rotate
+     x blocks around the ring and accumulate x_blk @ w[rows(blk)])
+
+  ring_matmul_reducescatter  x:[B, K/p]  w:[K/p, N]  -> y:[B, N/p]
+    (partial products are reduced while rotating: each output block
+     travels the ring once, accumulating every shard's contribution)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ring_perm(n: int):
+    return [(j, (j + 1) % n) for j in range(n)]
+
+
+def ring_allgather_matmul(x: jax.Array, w: jax.Array,
+                          axis_name: str) -> jax.Array:
+    """y_local = x_global @ w_local without materializing x_global.
+
+    x: [B, K_loc] (this shard's column block of the [B, K] activations);
+    w: [K, N_loc] (full contraction dim, this shard's output columns)."""
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    k_loc = x.shape[-1]
+    acc = jnp.zeros((x.shape[0], w.shape[-1]), jnp.float32)
+    xb = x
+    # static trip count: n is the (known) mesh axis size, so the loop
+    # unrolls and XLA pipelines ppermute(t) under dot(t)
+    for t in range(n):
+        src = (idx - t) % n            # owner of the block xb currently holds
+        wb = jax.lax.dynamic_slice_in_dim(w, src * k_loc, k_loc, axis=0)
+        acc = acc + jnp.dot(xb.astype(jnp.float32), wb.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        if t != n - 1:
+            xb = jax.lax.ppermute(xb, axis_name, _ring_perm(n))
+    return acc.astype(x.dtype)
+
+
+def ring_matmul_reducescatter(x: jax.Array, w: jax.Array,
+                              axis_name: str) -> jax.Array:
+    """y_local = reduce_scatter(x_local @ w_local) fused into the ring.
+
+    x: [B, K_loc]; w: [K_loc, N] (this shard's rows of the full weight).
+    Each shard's [B, N] partial product is never materialized: output
+    column blocks circulate the ring, each shard adding its partial for
+    the block it currently holds; after p-1 hops every block lands on its
+    owner fully reduced."""
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    n_loc = w.shape[-1] // n
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((x.shape[0], n_loc), jnp.float32)
+    for t in range(n):
+        # the chunk in hand is destined for shard (idx - t - 1); at the
+        # final step that is idx itself — own partial added last, kept
+        blk = (idx - t - 1) % n
+        wb = jax.lax.dynamic_slice_in_dim(w, blk * n_loc, n_loc, axis=1)
+        acc = acc + jnp.dot(xf, wb.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        if t != n - 1:
+            acc = jax.lax.ppermute(acc, axis_name, _ring_perm(n))
+    return acc.astype(x.dtype)

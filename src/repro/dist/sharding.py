@@ -1,0 +1,280 @@
+"""Logical-axis sharding: rule translation from logical dim names to mesh
+axes, with divisibility fallback and duplicate-axis avoidance.
+
+Model code never names mesh axes. It tags dims with *logical* names
+("batch", "seq", "mlp", "heads", "cache_seq", ...) via `shard(x, *names)`
+and the active rule set decides which mesh axes those names occupy:
+
+    with sharding.activate(mesh):            # DEFAULT_RULES
+        step = jax.jit(train_step)           # shard() constraints bind here
+        ...
+
+Rules map a logical name to one mesh axis, a tuple of axes (the dim is
+sharded over their product, greedy prefix by divisibility), or None
+(replicate). A dim whose size does not divide the axis product falls back
+to replication — glm4-9b's 2 kv heads on a 16-way "model" axis replicate
+instead of erroring — and an axis already consumed by an earlier dim of
+the same tensor is never reused (PartitionSpec validity).
+
+Three rule sets cover the production variants (launch/dryrun.py):
+  DEFAULT_RULES   train + serve default: FSDP weights ("embed" over
+                  "data"), TP over "model", batch over ("pod", "data").
+  SERVE_RULES     "-tp": TP-only weights — no FSDP all-gather per token.
+  DP_SERVE_RULES  "-dp": replicate weights, spread batch over every axis
+                  (small-arch serving).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.quantization import QTensor
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+DEFAULT_RULES: Dict[str, Any] = {
+    # activations / data
+    "batch": ("pod", "data"),
+    "seq": None,
+    "expert": "model",
+    # weights: FSDP along the embedding dim, TP along the wide dim
+    "embed": "data",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    # KV-cache sequence dim (decode): shard over "model"; the long-context
+    # variant also absorbs the idle "data" axis (batch=1 at 500k)
+    "cache_seq": "model",
+    "cache_seq_long": ("model", "data"),
+    # pipeline stages (dist/pipeline.py meshes)
+    "stage": "stage",
+}
+
+SERVE_RULES: Dict[str, Any] = dict(DEFAULT_RULES, embed=None)
+
+DP_SERVE_RULES: Dict[str, Any] = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data", "model"),
+    embed=None, mlp=None, heads=None, kv_heads=None, vocab=None,
+    expert=None, cache_seq=None, cache_seq_long=None,
+)
+
+
+# ---------------------------------------------------------------------------
+# Mesh context
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+def _current() -> Optional[Tuple[Any, Dict[str, Any]]]:
+    """(mesh, rules) of the innermost active context, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def activate(mesh, rules: Optional[Dict[str, Any]] = None):
+    """Bind (mesh, rules) for `shard()` constraints and spec inference.
+
+    The context is consulted at TRACE time — wrap the jit/lower call sites,
+    not the executions."""
+    _stack().append((mesh, dict(DEFAULT_RULES if rules is None else rules)))
+    try:
+        yield mesh
+    finally:
+        _stack().pop()
+
+
+def _active_rules(rules: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    if rules is not None:
+        return rules
+    ctx = _current()
+    return ctx[1] if ctx is not None else DEFAULT_RULES
+
+
+# ---------------------------------------------------------------------------
+# Rule resolution
+# ---------------------------------------------------------------------------
+
+def resolve_spec(shape: Sequence[int], names: Sequence[Optional[str]], mesh,
+                 rules: Dict[str, Any]) -> P:
+    """Translate logical dim names into a PartitionSpec against `mesh`.
+
+    Per dim: look up the rule (None / missing name -> replicate); keep the
+    greedy prefix of rule axes that exist in the mesh, are unused by earlier
+    dims, and whose cumulative product divides the dim size. `mesh` only
+    needs a `.shape` mapping {axis: size} (tests pass stubs)."""
+    axis_sizes = dict(mesh.shape)
+    used = set()
+    entries = []
+    for dim, name in zip(shape, names):
+        if name is None or name not in rules or rules[name] is None:
+            entries.append(None)
+            continue
+        rule = rules[name]
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        chosen = []
+        prod = 1
+        for ax in axes:
+            if ax not in axis_sizes or ax in used:
+                continue
+            if dim % (prod * axis_sizes[ax]):
+                break  # growing the product further cannot restore divisibility
+            chosen.append(ax)
+            prod *= axis_sizes[ax]
+        for ax in chosen:
+            used.add(ax)
+        if not chosen:
+            entries.append(None)
+        elif len(chosen) == 1:
+            entries.append(chosen[0])
+        else:
+            entries.append(tuple(chosen))
+    return P(*entries)
+
+
+def named_sharding(shape: Sequence[int], names: Sequence[Optional[str]],
+                   mesh, rules: Optional[Dict[str, Any]] = None
+                   ) -> NamedSharding:
+    return NamedSharding(mesh,
+                         resolve_spec(shape, names, mesh,
+                                      _active_rules(rules)))
+
+
+def shard(x, *names: Optional[str]):
+    """Logical sharding constraint; identity when no mesh context is active.
+
+    Trailing unnamed dims replicate. Call sites live in models/* on
+    activations — the constraint is a hint to GSPMD, never a layout
+    obligation on callers."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(x.shape, names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree spec inference (params / KV caches)
+# ---------------------------------------------------------------------------
+
+def _param_names(key: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical names for a parameter leaf, right-aligned on its dims.
+
+    Leading dims (stacked layers / super-blocks) replicate; the trailing
+    [in, out] matrix takes ("embed", "mlp") -> (FSDP, TP). Named
+    exceptions: embeddings, the untied head, MoE expert stacks (expert dim
+    is the TP dim; activations stay replicated over "model" between MoE
+    layers — see models/moe.py), and routers (tiny, replicated out dim)."""
+    if ndim < 2:
+        return (None,) * ndim
+    if key == "embedding":
+        return (None,) * (ndim - 2) + ("vocab", "embed")
+    if key == "lm_head":
+        return (None,) * (ndim - 2) + ("embed", "vocab")
+    if key.startswith("expert_") and ndim >= 3:
+        return (None,) * (ndim - 3) + ("expert", "embed", "mlp")
+    if key == "router":
+        return (None,) * (ndim - 2) + ("embed", None)
+    return (None,) * (ndim - 2) + ("embed", "mlp")
+
+
+def _qtensor_specs(qt: QTensor, key: str, mesh, rules) -> QTensor:
+    """Mirror a QTensor with NamedSharding children (same aux => same
+    treedef, so jit in_shardings / tree_map pairing line up leaf-wise).
+
+    Codes keep the weight's logical names (the packed int4 trailing dim
+    simply fails divisibility more often and replicates); scales reuse the
+    out-dim name on their last axis so dequant temporaries inherit the
+    weight spec."""
+    names = _param_names(key, len(qt.shape))
+    codes_spec = NamedSharding(
+        mesh, resolve_spec(qt.codes.shape, names[-qt.codes.ndim:], mesh,
+                           rules))
+    scale_names = (None,) * (qt.scale.ndim - 1) + (names[-1],)
+    scale_spec = NamedSharding(
+        mesh, resolve_spec(qt.scale.shape, scale_names, mesh, rules))
+    return QTensor(codes=codes_spec, scale=scale_spec, codebook=None,
+                   bits=qt.bits, mode=qt.mode, granularity=qt.granularity,
+                   group_size=qt.group_size, packed=qt.packed, shape=qt.shape)
+
+
+def param_specs(params, mesh, rules: Optional[Dict[str, Any]] = None):
+    """NamedSharding pytree for a parameter tree (concrete or eval_shape).
+
+    Structure matches `params` exactly — usable as jit in_shardings and
+    with tree_map(jax.device_put, params, specs)."""
+    rules = _active_rules(rules)
+
+    def walk(key, node):
+        if isinstance(node, dict):
+            return {k: walk(k, v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+            return type(node)(walk(key, v) for v in node)
+        if isinstance(node, QTensor):
+            return _qtensor_specs(node, key, mesh, rules)
+        names = _param_names(key, len(node.shape))
+        return NamedSharding(mesh,
+                             resolve_spec(node.shape, names, mesh, rules))
+
+    return walk("", params)
+
+
+_CACHE_KV_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
+def _cache_names(key: str, shape, batch: int) -> Tuple[Optional[str], ...]:
+    ndim = len(shape)
+    if key in _CACHE_KV_KEYS and ndim >= 4:
+        # [*stack, B, S, Hk, hd|1]
+        return ((None,) * (ndim - 4)
+                + ("batch", "cache_seq", "kv_heads", None))
+    if key == "pos":
+        return ("batch",) + (None,) * (ndim - 1)
+    # recurrent state (ssm/xlstm/hybrid): shard the batch dim only — the
+    # leftmost dim whose size matches the batch (leading dims are stacked
+    # layer counts)
+    names = [None] * ndim
+    for i, d in enumerate(shape):
+        if d == batch:
+            names[i] = "batch"
+            break
+    return tuple(names)
+
+
+def cache_specs(cache, mesh, batch: int, max_len: int,
+                long_context: bool = False,
+                rules: Optional[Dict[str, Any]] = None):
+    """NamedSharding pytree for a KV/state cache (see models/attention.py
+    for the layout). `long_context=True` routes the sequence dim through the
+    "cache_seq_long" rule (idle axes absorb the 500k cache)."""
+    rules = dict(_active_rules(rules))
+    if long_context and "cache_seq_long" in rules:
+        rules["cache_seq"] = rules["cache_seq_long"]
+
+    def walk(key, node):
+        if isinstance(node, dict):
+            return {k: walk(k, v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+            return type(node)(walk(key, v) for v in node)
+        names = _cache_names(key, node.shape, batch)
+        return NamedSharding(mesh,
+                             resolve_spec(node.shape, names, mesh, rules))
+
+    return walk("", cache)

@@ -1,0 +1,12 @@
+"""Pallas-TPU API compatibility aliases.
+
+Imported only by the Pallas kernel modules — ref-only paths (models,
+serve, the CPU dry-run with impl="ref") must never pull in
+jax.experimental.pallas.tpu just by importing repro.kernels.
+"""
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    getattr(_pltpu, "TPUCompilerParams")

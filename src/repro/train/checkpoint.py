@@ -136,9 +136,18 @@ def restore(ckpt_dir: str, like, step: Optional[int] = None,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     names = dict(_flatten(like))
     shard_map_ = dict(_flatten(shardings)) if shardings is not None else {}
+    with open(os.path.join(d, "manifest.json")) as f:
+        saved_dtypes = {k: v["dtype"]
+                        for k, v in json.load(f)["leaves"].items()}
     loaded = {}
     for name in names:
         arr = np.load(os.path.join(d, name + ".npy"))
+        if arr.dtype.kind == "V" and name in saved_dtypes:
+            # numpy round-trips ml_dtypes arrays (bfloat16) as raw void —
+            # reinterpret against the SAVE-time dtype the manifest recorded
+            # (the target tree's dtype may legitimately differ, e.g. a
+            # float16 template: view() there would misread the bits)
+            arr = arr.view(np.dtype(saved_dtypes[name]))
         if name in shard_map_ and shard_map_[name] is not None:
             loaded[name] = jax.device_put(arr, shard_map_[name])
         else:

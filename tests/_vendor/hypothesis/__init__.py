@@ -1,0 +1,119 @@
+"""Minimal stand-in for the `hypothesis` property-testing API.
+
+Loaded ONLY when the real hypothesis is not installed (tests/conftest.py
+appends this directory to sys.path after an ImportError probe — the
+container image has no hypothesis; CI installs the real pin and never
+sees this shim). Implements the subset this repo's tests use:
+
+    @given(strategy, ...) / @settings(deadline=..., max_examples=...)
+    settings.register_profile / load_profile, HealthCheck
+    strategies: integers, floats, booleans, sampled_from, composite, just
+
+Each @given test runs `max_examples` times with draws from a PRNG seeded
+by the test's qualified name — deterministic across runs and processes,
+no shrinking, no database.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random
+
+from . import strategies  # noqa: F401
+
+__version__ = "0.0.0-repro-shim"
+
+_DEFAULTS = {"max_examples": 25, "deadline": None,
+             "suppress_health_check": ()}
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+class settings:
+    """Decorator + profile registry (class-level, like the real one)."""
+
+    _profiles = {"default": dict(_DEFAULTS)}
+    _active = dict(_DEFAULTS)
+
+    def __init__(self, parent=None, **kwargs):
+        self.kwargs = dict(parent.kwargs) if isinstance(parent, settings) \
+            else {}
+        self.kwargs.update(kwargs)
+
+    def __call__(self, fn):
+        merged = dict(getattr(fn, "_shim_settings", {}))
+        merged.update(self.kwargs)
+        fn._shim_settings = merged
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, parent=None, **kwargs):
+        base = dict(cls._profiles.get("default", _DEFAULTS))
+        if parent is not None and parent in cls._profiles:
+            base.update(cls._profiles[parent])
+        base.update(kwargs)
+        cls._profiles[name] = base
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._active = dict(cls._profiles[name])
+
+
+def _seed_for(fn) -> int:
+    name = f"{fn.__module__}:{fn.__qualname__}".encode()
+    return int.from_bytes(hashlib.blake2b(name, digest_size=8).digest(),
+                          "little")
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = dict(settings._active)
+            conf.update(getattr(fn, "_shim_settings", {}))
+            rng = random.Random(_seed_for(fn))
+            for _ in range(int(conf.get("max_examples") or 25)):
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng)
+                            for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except _UnsatisfiedAssumption:
+                    continue  # assume() rejected this example; draw again
+
+        # strategy-filled params must not look like pytest fixtures: strip
+        # them (the trailing positionals + keyword names) from the
+        # signature pytest introspects, and drop __wrapped__ so pytest
+        # doesn't unwrap back to the original
+        del wrapper.__wrapped__
+        params = list(inspect.signature(fn).parameters.values())
+        n_args = len(arg_strategies)
+        keep = params[:len(params) - n_args] if n_args else params
+        keep = [p for p in keep if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(keep)
+        # parity with the real attribute (pytest plugins introspect
+        # fn.hypothesis.inner_test)
+        wrapper.hypothesis = type("_Hypothesis", (),
+                                  {"inner_test": staticmethod(fn)})()
+        return wrapper
+
+    return decorate
+
+
+def assume(condition) -> bool:
+    """A failed assume skips the current example: the given() loop above
+    catches _UnsatisfiedAssumption and moves to the next draw."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass

@@ -1,0 +1,71 @@
+"""Strategy subset for the hypothesis shim (see __init__.py)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[Any], Any]):
+        self._draw = draw_fn
+
+    def example(self, rng) -> Any:
+        return self._draw(rng)
+
+    def map(self, f: Callable) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred: Callable, max_tries: int = 100
+               ) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    # bias toward the magnitude spread (log-uniform) when the range is
+    # positive and wide — matches how the tests use this (scale factors)
+    if min_value > 0 and max_value / min_value > 100:
+        lo, hi = math.log(min_value), math.log(max_value)
+        return SearchStrategy(lambda rng: math.exp(rng.uniform(lo, hi)))
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(options: Sequence) -> SearchStrategy:
+    opts = list(options)
+    return SearchStrategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10
+          ) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def composite(f: Callable) -> Callable[..., SearchStrategy]:
+    def builder(*args, **kwargs) -> SearchStrategy:
+        def draw_fn(rng):
+            def draw(strategy: SearchStrategy):
+                return strategy.example(rng)
+            return f(draw, *args, **kwargs)
+        return SearchStrategy(draw_fn)
+    return builder

@@ -1,9 +1,62 @@
 import os
+import sys
 
-# smoke tests / benches must see ONE device — the 512-device override is
-# exclusively the dry-run's (set inside repro.launch.dryrun, never globally)
+# Deterministic CPU backend for the whole suite.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# 8 host CPU devices, set BEFORE the first jax import (jax locks the device
+# count on init): test_sharding / test_distributed exercise real meshes on
+# CPU-only CI. Single-device tests are unaffected (unsharded arrays commit
+# to device 0). The dry-run's 512-device override stays private to its own
+# process (launch/dryrun.py), and test_distributed's subprocesses set their
+# own flag. APPEND to any pre-existing XLA_FLAGS rather than losing the
+# forced count to unrelated tuning flags; an explicit device-count flag in
+# the environment wins.
+_DEV_FLAG = "--xla_force_host_platform_device_count"
+if _DEV_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" {_DEV_FLAG}=8").strip()
+
+# The container image ships without hypothesis; fall back to the vendored
+# API-compatible shim so the property tests still collect and run. CI
+# installs the real pin and never loads the shim.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# Test modules whose cases need more than one device (marker applied below
+# so CI lanes can split: -m multi_device / -m "not multi_device").
+_MULTI_DEVICE_MODULES = {"test_distributed", "test_sharding"}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multi_device: exercises >1 jax device (8 forced host CPU devices)")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        mod = item.module.__name__.rsplit(".", 1)[-1]
+        if mod in _MULTI_DEVICE_MODULES:
+            item.add_marker(pytest.mark.multi_device)
+        if mod == "test_distributed" and \
+                "eight_cpu_devices" not in item.fixturenames:
+            # guard: skip (with the flag spelled out) instead of failing
+            # obscurely when the device forcing was overridden
+            item.fixturenames.append("eight_cpu_devices")
+
+
+@pytest.fixture(scope="session")
+def eight_cpu_devices():
+    """The 8 forced host CPU devices (skips if the flag was overridden)."""
+    devices = jax.devices()
+    if len(devices) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8"
+                    f" (got {len(devices)} devices)")
+    return devices

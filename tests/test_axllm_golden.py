@@ -1,0 +1,136 @@
+"""Golden tests for the AxLLM reuse path.
+
+1. The fused Pallas dequant-matmul must match the ref.py dense matmul
+   BIT-FOR-BIT on int8/int4 codes. Two regimes make bitwise equality a
+   well-defined contract instead of a tolerance:
+     * codebook mode — both impls read the identical RC table entry per
+       code (the one-hot MXU lookup is exact), so the dequantized weights
+       agree elementwise and identically-shaped f32 dots agree bitwise;
+     * affine mode with dyadic scales (scale = qmax * 2^-e) — every
+       product and partial sum is an integer times 2^-e, exactly
+       representable in f32 well below 2^24, so BOTH impls must equal the
+       int64 numpy matmul no matter their summation order.
+
+2. The analytic reuse rate (core/reuse.py, the Fig. 8 metric) must equal
+   the cycle simulator's counted multiply savings: the simulator executes
+   a miss per first occurrence of an RC cell per segment and a hit per
+   repeat, so rc_hits / total_ops is the same quantity reuse_rate()
+   computes combinatorially.
+"""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import reuse as R
+from repro.core.quantization import QTensor, pack_int4
+from repro.core.simulator import SimConfig, simulate_matrix
+from repro.kernels import ops
+
+M, K, N = 64, 512, 256  # one full (bm, bk, bn) kernel block
+
+
+def _qtensor(codes, scale, bits, mode, packed=False):
+    """codes is always the unpacked [K, N] int8 array; `packed` stores it
+    two-per-byte the way deploy-time quantization would."""
+    c = pack_int4(jnp.asarray(codes)) if packed else jnp.asarray(codes)
+    return QTensor(codes=c, scale=jnp.asarray(scale), codebook=None,
+                   bits=bits, mode=mode, granularity="per_channel",
+                   group_size=128, packed=packed, shape=codes.shape)
+
+
+def _int_inputs(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-8, 9, size=(M, K)).astype(np.float32)
+    scale = (2.0 ** rng.integers(-4, 3, size=(1, N))).astype(np.float32)
+    return rng, jnp.asarray(x), scale
+
+
+def test_codebook_int8_bit_for_bit():
+    rng, x, scale = _int_inputs(0)
+    codes = rng.integers(-127, 128, size=(K, N)).astype(np.int8)
+    qt = _qtensor(codes, scale, 8, "codebook")
+    y_ref = np.asarray(ops.axllm_matmul(x, qt, impl="ref"))
+    y_pal = np.asarray(ops.axllm_matmul(x, qt, impl="pallas_interpret"))
+    np.testing.assert_array_equal(y_pal, y_ref)
+
+
+def test_codebook_int4_packed_bit_for_bit():
+    rng, x, scale = _int_inputs(1)
+    codes = rng.integers(-8, 8, size=(K, N)).astype(np.int8)
+    qt = _qtensor(codes, scale, 4, "codebook", packed=True)
+    y_ref = np.asarray(ops.axllm_matmul(x, qt, impl="ref"))
+    y_pal = np.asarray(ops.axllm_matmul(x, qt, impl="pallas_interpret"))
+    np.testing.assert_array_equal(y_pal, y_ref)
+
+
+def test_affine_int8_exact_integer_semantics():
+    """With dyadic scales both impls must reproduce the exact int64
+    matmul bit-for-bit — the strongest form of the paper's 'preserves
+    exact arithmetic semantics' claim (§II)."""
+    rng, x, _ = _int_inputs(2)
+    codes = rng.integers(-127, 128, size=(K, N)).astype(np.int8)
+    scale = np.full((1, N), 127.0 * 2.0 ** -3, np.float32)
+    qt = _qtensor(codes, scale, 8, "affine")
+    exact = ((np.asarray(x, np.int64) @ codes.astype(np.int64))
+             * 2.0 ** -3).astype(np.float32)
+    y_ref = np.asarray(ops.axllm_matmul(x, qt, impl="ref"))
+    y_pal = np.asarray(ops.axllm_matmul(x, qt, impl="pallas_interpret"))
+    np.testing.assert_array_equal(y_pal, exact)
+    np.testing.assert_array_equal(y_ref, exact)
+
+
+def test_affine_int4_exact_integer_semantics():
+    rng, x, _ = _int_inputs(3)
+    codes = rng.integers(-7, 8, size=(K, N)).astype(np.int8)
+    scale = np.full((1, N), 7.0 * 2.0 ** -2, np.float32)
+    qt = _qtensor(codes, scale, 4, "affine", packed=True)
+    exact = ((np.asarray(x, np.int64) @ codes.astype(np.int64))
+             * 2.0 ** -2).astype(np.float32)
+    y_ref = np.asarray(ops.axllm_matmul(x, qt, impl="ref"))
+    y_pal = np.asarray(ops.axllm_matmul(x, qt, impl="pallas_interpret"))
+    np.testing.assert_array_equal(y_pal, exact)
+    np.testing.assert_array_equal(y_ref, exact)
+
+
+# ---------------------------------------------------------------------------
+# reuse_rate vs the cycle simulator's counted savings
+# ---------------------------------------------------------------------------
+
+@st.composite
+def code_matrices(draw):
+    n = draw(st.integers(1, 24))
+    m = draw(st.integers(1, 400))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.integers(-127, 128, size=(n, m)).astype(np.int32)
+
+
+@given(code_matrices(), st.sampled_from([64, 256, 512]),
+       st.sampled_from([True, False]))
+@settings(deadline=None, max_examples=25)
+def test_reuse_rate_matches_simulator_savings(codes, buf, fold):
+    cfg = SimConfig(buf=buf, fold_sign=fold)
+    rep = simulate_matrix(codes, cfg, measure_hazards=False)
+    # every op is either an executed multiply or an RC hit, no third bucket
+    assert rep.mults + rep.rc_hits == rep.total_ops == codes.size
+    analytic = R.reuse_rate(codes, buf, fold_sign=fold)
+    # same integer counts; the two float expressions (hits/total vs
+    # 1 - uniq/total) may differ in the last ulp
+    assert abs(rep.reuse_rate - analytic) < 1e-12
+    # counted savings == eliminated multiplies
+    assert rep.rc_hits == codes.size - \
+        R.segment_unique_counts(codes, buf, fold_sign=fold).sum()
+
+
+@given(code_matrices(), st.integers(1, 4))
+@settings(deadline=None, max_examples=10)
+def test_simulator_token_scaling_preserves_rate(codes, tokens):
+    """The RC clears between inputs (§III.c): reuse rate is per-token
+    invariant while absolute savings scale linearly."""
+    cfg = SimConfig(buf=256)
+    r1 = simulate_matrix(codes, cfg, tokens=1, measure_hazards=False)
+    rt = simulate_matrix(codes, cfg, tokens=tokens, measure_hazards=False)
+    assert rt.reuse_rate == r1.reuse_rate
+    assert rt.rc_hits == tokens * r1.rc_hits

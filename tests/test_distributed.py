@@ -16,7 +16,10 @@ def run_devices(body: str, n: int = 8):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # pin the backend: unset JAX_PLATFORMS makes jax probe for accelerator
+    # plugins, which hangs on CPU-only CI hosts; the forced host device
+    # count composes fine with an explicit cpu platform
+    env["JAX_PLATFORMS"] = "cpu"
     script = "import jax, jax.numpy as jnp, numpy as np\n" + \
         textwrap.dedent(body)
     r = subprocess.run([sys.executable, "-c", script], env=env,

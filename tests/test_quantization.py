@@ -121,3 +121,63 @@ def test_qtensor_pytree_roundtrip():
     qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
     np.testing.assert_array_equal(np.asarray(Q.dequantize(qt)),
                                   np.asarray(Q.dequantize(qt2)))
+
+
+# ---------------------------------------------------------------------------
+# Per-group round-trip + code-histogram invariants (reuse-cache contract)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def group_weight_matrices(draw):
+    """[in, out] with the in dim a multiple of the group size."""
+    g = draw(st.sampled_from([32, 64]))
+    n_groups = draw(st.integers(1, 6))
+    m = draw(st.integers(2, 48))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((g * n_groups, m)) * scale).astype(np.float32)
+    return w, g
+
+
+@given(group_weight_matrices())
+def test_per_group_roundtrip_bound(wg):
+    """|deq(q(w)) - w| <= group_scale/(2*qmax) elementwise: each group's
+    rounding error is half its own quantization step."""
+    w, g = wg
+    cfg = Q.QuantConfig(bits=8, mode="affine", granularity="per_group",
+                        group_size=g)
+    qt = Q.quantize(w, cfg)
+    deq = np.asarray(Q.dequantize(qt))
+    n_in, n_out = w.shape
+    # scale [G, 1, out] -> per-element step [in, out]
+    step = np.repeat(np.asarray(qt.scale)[:, 0, :], g, axis=0) / cfg.qmax
+    assert np.all(np.abs(deq - w) <= step / 2 + 1e-6 * np.abs(w).max())
+
+
+@given(group_weight_matrices(), st.sampled_from([8, 4]))
+def test_segment_code_histograms_sum_to_segment_length(wg, bits):
+    """Within every (row, segment) block, the per-cell code histogram must
+    sum to the segment length — every element lands in exactly one RC cell.
+    This is the invariant core/reuse.py's unique-counting (and therefore
+    the Result Cache hit accounting) is built on."""
+    w, g = wg
+    cfg = Q.QuantConfig(bits=bits, mode="affine", granularity="per_group",
+                        group_size=g, pack=False)
+    from repro.core.reuse import fold_codes
+    codes = np.asarray(Q.decode_codes(Q.quantize(w, cfg))).T  # rows stream
+    cells = fold_codes(codes)                                  # |code| fold
+    n, m = cells.shape
+    for seg in (64, 256, m):
+        n_seg = -(-m // seg)
+        for s in range(n_seg):
+            block = cells[:, s * seg:(s + 1) * seg]
+            hist = np.apply_along_axis(
+                lambda r: np.bincount(r, minlength=256), 1, block)
+            assert hist.shape == (n, 256)
+            np.testing.assert_array_equal(hist.sum(axis=1), block.shape[1])
+        # and the unique counts derived from those histograms match reuse.py
+        from repro.core.reuse import segment_unique_counts
+        uniq = segment_unique_counts(codes, seg)
+        assert uniq.shape == (n, n_seg)
+        assert np.all(uniq >= 1) and np.all(uniq <= min(seg, 256))

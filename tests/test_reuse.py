@@ -89,3 +89,23 @@ def test_lora_overlap_bounds():
     assert R.lora_row_overlap(wc, ac) == 1.0
     ac2 = np.full((4, 2), 99, np.int32)
     assert R.lora_row_overlap(wc, ac2) == 0.0
+
+
+@given(code_matrices(), st.sampled_from([32, 64, 256]))
+@settings(deadline=None, max_examples=20)
+def test_histogram_mass_conservation(codes, seg):
+    """Per-segment histograms over RC cells partition the segment: total
+    mass equals codes.size, and unique counts are the nonzero bins."""
+    c = R.fold_codes(codes)
+    n, m = c.shape
+    n_seg = -(-m // seg)
+    uniq = R.segment_unique_counts(codes, seg)
+    total = 0
+    for s in range(n_seg):
+        block = c[:, s * seg:(s + 1) * seg]
+        for row in range(n):
+            hist = np.bincount(block[row], minlength=256)
+            assert hist.sum() == block.shape[1]
+            assert (hist > 0).sum() == uniq[row, s]
+            total += hist.sum()
+    assert total == codes.size
