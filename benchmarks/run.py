@@ -8,6 +8,7 @@
 #   power_table       paper §V       power/energy model
 #   kernel_bench      (framework)    int8/int4 vs f32 matmul + KV bytes
 #   roofline_table    (deliverable g) per-cell roofline terms from dry-run
+#   serve_bench       (framework)    continuous-batching tok/s + occupancy
 
 from __future__ import annotations
 
@@ -18,10 +19,11 @@ import time
 def main() -> None:
     from benchmarks import (fig1_breakdown, fig8_reuse_rate, fig9_speedup,
                             kernel_bench, lora_table, power_table,
-                            roofline_table, shiftadd_compare)
+                            roofline_table, serve_bench, shiftadd_compare)
 
     modules = [fig1_breakdown, fig8_reuse_rate, fig9_speedup, lora_table,
-               shiftadd_compare, power_table, kernel_bench, roofline_table]
+               shiftadd_compare, power_table, kernel_bench, roofline_table,
+               serve_bench]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in modules:

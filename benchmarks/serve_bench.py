@@ -1,0 +1,132 @@
+"""Continuous-batching serve throughput benchmark -> BENCH_serve.json.
+
+Drives the ServeEngine scheduler step-by-step over a mixed-length synthetic
+request stream (ragged prefill waves) in both bf16 and AxLLM-int8 modes and
+records the throughput/occupancy trajectory:
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
+
+CI runs --smoke on every push and uploads the JSON artifact, so the serving
+perf trajectory accumulates per-commit. Also exposes the harness-standard
+``run() -> [(name, us_per_call, derived)]`` used by benchmarks.run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+SMOKE = dict(d_model=64, n_layers=2, vocab=256, n_slots=2, max_len=64,
+             requests=6, max_new=4, prompt_lens=(8, 12, 31))
+FULL = dict(d_model=128, n_layers=4, vocab=512, n_slots=8, max_len=256,
+            requests=48, max_new=32, prompt_lens=(8, 12, 31, 64, 96))
+
+
+def _build(p):
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models.model import get_model
+
+    cfg = ModelConfig(name="serve-bench", family="dense",
+                      n_layers=p["n_layers"], d_model=p["d_model"],
+                      n_heads=4, n_kv_heads=2, d_ff=2 * p["d_model"],
+                      vocab_size=p["vocab"], head_dim=16,
+                      vocab_pad_multiple=64, dtype="float32")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve(cfg, params, p, quantize: bool):
+    import numpy as np
+    from repro.serve.engine import ServeEngine
+
+    def submit_stream(eng):
+        rng = np.random.default_rng(0)
+        lens = p["prompt_lens"]
+        for i in range(p["requests"]):
+            eng.submit(rng.integers(0, cfg.vocab_size,
+                                    size=lens[i % len(lens)])
+                       .astype(np.int32), max_new=p["max_new"])
+
+    # untimed warmup pass: the timed engine inherits the jitted
+    # prefill-bucket/decode/writer callables, so the trajectory below is
+    # compile-free steady state
+    warm = ServeEngine(cfg, params, n_slots=p["n_slots"],
+                       max_len=p["max_len"], quantize=quantize)
+    submit_stream(warm)
+    warm.run()
+    eng = ServeEngine(cfg, params, n_slots=p["n_slots"],
+                      max_len=p["max_len"], quantize=quantize)
+    eng._prefill_cache = warm._prefill_cache
+    eng._decode = warm._decode
+    eng._writer = warm._writer
+    submit_stream(eng)
+
+    traj = []
+    t0 = time.perf_counter()
+    decoded = 0
+    while eng.step():
+        traj.append({
+            "step": eng.stats.steps,
+            "active": eng.stats.decode_tokens - decoded,  # slots decoded
+            "queued": len(eng.queue),
+        })
+        decoded = eng.stats.decode_tokens
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in eng.finished)
+    return {
+        "wall_s": round(wall, 4),
+        "generated_tokens": toks,
+        "tokens_per_sec": round(toks / wall, 2) if wall else 0.0,
+        "stats": eng.stats.as_dict(),
+        "trajectory": traj,
+    }
+
+
+def bench(smoke: bool = True) -> dict:
+    p = SMOKE if smoke else FULL
+    cfg, params = _build(p)
+    report = {
+        "smoke": smoke,
+        "workload": {k: (list(v) if isinstance(v, tuple) else v)
+                     for k, v in p.items()},
+        "modes": {},
+    }
+    for label, quant in (("bf16", False), ("axllm-int8", True)):
+        report["modes"][label] = _serve(cfg, params, p, quant)
+    return report
+
+
+def run():
+    """benchmarks.run harness entry."""
+    rep = bench(smoke=True)
+    rows = []
+    for label, m in rep["modes"].items():
+        us = 1e6 * m["wall_s"] / max(m["generated_tokens"], 1)
+        rows.append((f"serve/{label}", us,
+                     f"tok/s={m['tokens_per_sec']};"
+                     f"occ={m['stats']['mean_occupancy']:.2f}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    rep = bench(smoke=args.smoke)
+    rep["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    with open(args.out, "w") as f:
+        json.dump(rep, f, indent=2, sort_keys=True)
+    for label, m in rep["modes"].items():
+        print(f"[{label}] {m['generated_tokens']} tokens "
+              f"{m['tokens_per_sec']} tok/s "
+              f"occupancy {m['stats']['mean_occupancy']:.2f} "
+              f"({m['stats']['steps']} steps)")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,8 @@ def apply_overrides(cfg: ModelConfig, overrides: dict) -> ModelConfig:
         t = fields[k].type
         if t in ("int", int):
             typed[k] = int(v)
+        elif t == "Optional[int]":
+            typed[k] = None if str(v).lower() in ("none", "") else int(v)
         elif t in ("float", float):
             typed[k] = float(v)
         elif t in ("bool", bool):

@@ -70,6 +70,7 @@ class ModelConfig:
     quant_bits: int = 8                   # serve-path weight codes
     quant_kv: bool = False                # int8 KV cache (beyond-paper lever)
     shard_cache_seq: bool = True          # shard KV seq dim when kv heads < axis
+    eos_id: Optional[int] = None          # serve-path stop token (None: run to max_new)
 
     # ------------------------------------------------------------------------
     @property

@@ -1,14 +1,25 @@
 """Serving launcher: loads a checkpoint (or fresh weights), deploys through
-the AxLLM quantized path, and serves a synthetic request stream through the
-batched engine.
+the AxLLM quantized path, and serves a synthetic mixed-length request stream
+through the continuous-batching engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch repro-100m \
-      --requests 16 --max-new 32 [--no-quantize] [--kv-int8]
+      --requests 16 --max-new 32 [--no-quantize] [--kv-int8] \
+      [--eos-id 0] [--long-prompt reject] [--stats]
+
+Flags of note:
+  --eos-id N        per-slot stop token (overrides cfg.eos_id; -1 disables)
+  --long-prompt P   'truncate' (keep the prompt tail, default) or 'reject'
+                    prompts longer than max_len-1
+  --prompt-lens L   comma list of prompt lengths cycled over the stream
+                    (mixed lengths exercise the ragged prefill waves)
+  --stats           print the engine's scheduler stats as JSON
+                    (admitted/finished/truncated, tokens/step, occupancy)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -30,6 +41,14 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--no-quantize", action="store_true")
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token id (-1: disable even if cfg sets one)")
+    ap.add_argument("--long-prompt", choices=("truncate", "reject"),
+                    default="truncate")
+    ap.add_argument("--prompt-lens", default="8,12,31",
+                    help="comma list of prompt lengths cycled over requests")
+    ap.add_argument("--stats", action="store_true",
+                    help="print scheduler stats JSON after the run")
     ap.add_argument("--set", action="append", default=[])
     args = ap.parse_args(argv)
 
@@ -48,21 +67,32 @@ def main(argv=None):
         (params, _), step = C.restore(args.ckpt, (params, opt))
         print(f"restored step {step} from {args.ckpt}")
 
+    eos_id = args.eos_id
+    if eos_id is not None and eos_id < 0:
+        eos_id = None
+        cfg = apply_overrides(cfg, {"eos_id": "none"})
     eng = ServeEngine(cfg, params, n_slots=args.slots,
                       max_len=args.max_len,
-                      quantize=not args.no_quantize)
+                      quantize=not args.no_quantize,
+                      eos_id=eos_id, long_prompt=args.long_prompt)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
-               for _ in range(args.requests)]
+    lens = [int(x) for x in args.prompt_lens.split(",") if x]
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=lens[i % len(lens)]).astype(np.int32)
+               for i in range(args.requests)]
     t0 = time.time()
-    outs = eng.generate(prompts, max_new=args.max_new)
+    reqs = eng.generate(prompts, max_new=args.max_new, return_requests=True)
     dt = time.time() - t0
-    toks = sum(len(o) for o in outs)
+    toks = sum(len(r.tokens) for r in reqs)
     mode = "bf16" if args.no_quantize else f"axllm-int{cfg.quant_bits}"
-    print(f"[{mode}] {len(outs)} requests, {toks} tokens, "
-          f"{toks/dt:.1f} tok/s (host fallback path)")
-    for o in outs[:3]:
-        print("  ->", o[:12])
+    print(f"[{mode}] {len(reqs)} requests, {toks} tokens, "
+          f"{toks/dt:.1f} tok/s, occupancy "
+          f"{eng.stats.mean_occupancy:.2f} (host fallback path)")
+    for r in reqs[:3]:
+        tag = " [truncated]" if r.truncated else ""
+        print(f"  -> {r.tokens[:12]}{tag}")
+    if args.stats:
+        print(json.dumps(eng.stats.as_dict(), indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -75,6 +75,21 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
     return cache
 
 
+def cache_spec(cfg):
+    """Batch axis per cache leaf — the serve-engine slot-insertion contract.
+
+    KV leaves are stacked over layers (leading L dim), so batch sits at
+    axis 1; the per-row write cursor ``pos`` is batch-leading (axis 0).
+    Must mirror :func:`init_cache` leaf-for-leaf (tested against shape
+    inference in tests/test_serve.py).
+    """
+    spec = {"k": 1, "v": 1, "pos": 0}
+    if cfg.quant_kv:
+        spec["k_scale"] = 1
+        spec["v_scale"] = 1
+    return spec
+
+
 def _quantize_kv(x):
     """Per-(pos, head) int8 quantization of new KV entries."""
     s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8) / 127.0

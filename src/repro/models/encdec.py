@@ -172,8 +172,22 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
     return cache
 
 
-def prefill(params, batch, cfg, cache, impl: str = "auto"):
-    """Encode frames, precompute cross KV, prefill decoder self KV."""
+def cache_spec(cfg):
+    """Batch axis per cache leaf: self-attention KV per attention.cache_spec,
+    cross KV stacked over layers (batch axis 1)."""
+    spec = A.cache_spec(cfg)
+    spec["cross_k"] = 1
+    spec["cross_v"] = 1
+    return spec
+
+
+def prefill(params, batch, cfg, cache, impl: str = "auto", lengths=None):
+    """Encode frames, precompute cross KV, prefill decoder self KV.
+
+    `lengths` ([B] int32) enables ragged right-padded decoder prompts: the
+    decoder self-attention is causal, so real tokens never see the padding;
+    logits are gathered at each row's last real position and the cursor is
+    set per row (pad KV beyond it is dead and overwritten by decode)."""
     enc_out = encode(params, batch["frames"], cfg, impl=impl)
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -191,12 +205,18 @@ def prefill(params, batch, cfg, cache, impl: str = "auto"):
                if k not in ("pos", "cross_k", "cross_v")}
     x, (new_self, ck, cv) = L.maybe_scan(
         body, x, (params["dec_layers"], self_kv), cfg.scan_layers)
-    x = L.norm_fwd(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if lengths is None:
+        x = x[:, -1:]
+        pos = jnp.full((b,), s, jnp.int32)
+    else:
+        pos = jnp.asarray(lengths, jnp.int32)
+        x = x[jnp.arange(b), pos - 1][:, None]
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
     logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
     new_cache = dict(new_self)
     new_cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
     new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
-    new_cache["pos"] = jnp.full((b,), s, jnp.int32)
+    new_cache["pos"] = pos
     return logits, new_cache
 
 

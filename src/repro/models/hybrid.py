@@ -138,6 +138,19 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
     return cache
 
 
+def cache_spec(cfg):
+    """Batch axis per cache leaf. Attention-site KV stacks over sites
+    (batch axis 1, pos axis 0 — attention.cache_spec); Mamba states stack
+    [n_full, every, B, ...] (axis 2), remainder layers [rem, B, ...]
+    (axis 1)."""
+    n_full, rem, every = _groups(cfg)
+    spec = {"attn": A.cache_spec(cfg), "conv": 2, "ssm": 2, "pos": 0}
+    if rem:
+        spec["conv_rem"] = 1
+        spec["ssm_rem"] = 1
+    return spec
+
+
 def decode_step(params, token, cfg, cache, impl: str = "auto"):
     n_full, rem, every = _groups(cfg)
     pos = cache["pos"]
@@ -179,9 +192,16 @@ def decode_step(params, token, cfg, cache, impl: str = "auto"):
     return logits, new_cache
 
 
-def prefill(params, tokens, cfg, cache, impl: str = "auto"):
+def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None):
     """Parallel prefill: chunkwise SSD over the full prompt + per-site
-    attention prefill; emits all recurrent states and the filled site KVs."""
+    attention prefill; emits all recurrent states and the filled site KVs.
+
+    The Mamba backbone is recurrent, so ragged (`lengths`) prefill is
+    rejected — the serve engine batches equal-length prompts instead."""
+    if lengths is not None:
+        raise NotImplementedError(
+            "hybrid prefill is recurrent (Mamba backbone): padded positions "
+            "would enter the state (ragged_prefill=False).")
     n_full, rem, every = _groups(cfg)
     b, s = tokens.shape
     pos = jnp.full((b,), s, jnp.int32)

@@ -5,6 +5,16 @@
     loss = api.loss(params, batch)              # train_4k
     logits, cache = api.prefill(params, batch, cache)   # prefill_32k
     logits, cache = api.decode(params, token, cache)    # decode_32k / long_500k
+
+Serving contract (consumed by repro.serve.engine):
+
+- ``cache_spec``: pytree with the same treedef as ``init_cache`` output,
+  each leaf the *batch axis* of the corresponding cache leaf. Slot-based
+  engines index this axis to insert/evict requests — no shape guessing.
+- ``ragged_prefill``: True when ``prefill`` accepts ``lengths`` ([B] int32)
+  and handles right-padded mixed-length prompts in one batch (causal
+  attention families). Recurrent families (ssm/hybrid) reject ``lengths``
+  and must be prefixed in equal-length batches.
 """
 
 from __future__ import annotations
@@ -28,6 +38,8 @@ class ModelAPI:
     init_cache: Callable[..., Any]
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
+    cache_spec: Any = None           # batch axis per init_cache leaf
+    ragged_prefill: bool = False     # prefill(lengths=...) supported
 
 
 def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
@@ -41,9 +53,11 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             forward=lambda p, b: mod.forward(p, b["tokens"], cfg, impl=impl),
             init_cache=lambda batch, max_len: mod.init_cache(
                 cfg, batch, max_len),
-            prefill=lambda p, b, c: mod.prefill(p, b["tokens"], cfg, c,
-                                                impl=impl),
+            prefill=lambda p, b, c, lengths=None: mod.prefill(
+                p, b["tokens"], cfg, c, impl=impl, lengths=lengths),
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+            cache_spec=mod.cache_spec(cfg),
+            ragged_prefill=True,
         )
     if fam == "ssm":
         mod = xlstm
@@ -54,9 +68,11 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             forward=lambda p, b: mod.forward(p, b["tokens"], cfg, impl=impl),
             init_cache=lambda batch, max_len: mod.init_cache(cfg, batch,
                                                              max_len),
-            prefill=lambda p, b, c: mod.prefill(p, b["tokens"], cfg, c,
-                                                impl=impl),
+            prefill=lambda p, b, c, lengths=None: mod.prefill(
+                p, b["tokens"], cfg, c, impl=impl, lengths=lengths),
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+            cache_spec=mod.cache_spec(cfg),
+            ragged_prefill=False,
         )
     if fam == "hybrid":
         mod = hybrid
@@ -67,9 +83,11 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             forward=lambda p, b: mod.forward(p, b["tokens"], cfg, impl=impl),
             init_cache=lambda batch, max_len: mod.init_cache(cfg, batch,
                                                              max_len),
-            prefill=lambda p, b, c: mod.prefill(p, b["tokens"], cfg, c,
-                                                impl=impl),
+            prefill=lambda p, b, c, lengths=None: mod.prefill(
+                p, b["tokens"], cfg, c, impl=impl, lengths=lengths),
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+            cache_spec=mod.cache_spec(cfg),
+            ragged_prefill=False,
         )
     if fam == "audio":
         mod = encdec
@@ -80,8 +98,11 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             forward=lambda p, b: mod.forward(p, b, cfg, impl=impl),
             init_cache=lambda batch, max_len: mod.init_cache(cfg, batch,
                                                              max_len),
-            prefill=lambda p, b, c: mod.prefill(p, b, cfg, c, impl=impl),
+            prefill=lambda p, b, c, lengths=None: mod.prefill(
+                p, b, cfg, c, impl=impl, lengths=lengths),
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+            cache_spec=mod.cache_spec(cfg),
+            ragged_prefill=True,
         )
     raise ValueError(f"unknown family {fam!r}")
 

@@ -102,12 +102,25 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
     return A.init_cache(cfg, batch, max_len, dtype)
 
 
+def cache_spec(cfg):
+    """Batch axis per cache leaf (see attention.cache_spec)."""
+    return A.cache_spec(cfg)
+
+
 def _cache_xs(cache):
     return {k: v for k, v in cache.items() if k != "pos"}
 
 
-def prefill(params, tokens, cfg, cache, impl: str = "auto"):
-    """tokens: [B, S] -> (last-position logits [B, V], filled cache)."""
+def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None):
+    """tokens: [B, S] -> (last-position logits [B, V], filled cache).
+
+    With `lengths` ([B] int32, ragged right-padded prompts), logits are
+    gathered at each row's final real position and the cache cursor is set
+    to `lengths`. Causal masking keeps real tokens from attending to the
+    padding (pads sit *after* them); pad-position KV entries are garbage
+    but live beyond the per-row cursor, so decode's length mask never
+    reads them and subsequent writes overwrite them in place.
+    """
     b, s = tokens.shape
     x = L.embed_fwd(params["embed"], tokens).astype(_param_dtype(cfg))
 
@@ -122,10 +135,16 @@ def prefill(params, tokens, cfg, cache, impl: str = "auto"):
 
     x, new_kv = L.maybe_scan(body, x, (params["layers"], _cache_xs(cache)),
                              cfg.scan_layers)
-    x = L.norm_fwd(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if lengths is None:
+        x = x[:, -1:]
+        pos = jnp.full((b,), s, jnp.int32)
+    else:
+        pos = jnp.asarray(lengths, jnp.int32)
+        x = x[jnp.arange(b), pos - 1][:, None]
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
     logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
     new_cache = dict(new_kv)
-    new_cache["pos"] = jnp.full((b,), s, jnp.int32)
+    new_cache["pos"] = pos
     return logits, new_cache
 
 

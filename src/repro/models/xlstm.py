@@ -302,6 +302,17 @@ def init_cache(cfg, batch: int, max_len: int = 0, dtype=None):
             "pos": jnp.zeros((batch,), jnp.int32)}
 
 
+def cache_spec(cfg):
+    """Batch axis per cache leaf. mLSTM states are stacked
+    [n_super, m_per, B, ...] (batch axis 2), sLSTM [n_super, B, ...]
+    (axis 1), pos [B] (axis 0)."""
+    return {
+        "mlstm": (2, 2, 2),        # (conv, c_aug, m)
+        "slstm": (1, 1, 1, 1),     # (c, n, h, m)
+        "pos": 0,
+    }
+
+
 def decode_step(params, token, cfg, cache, impl: str = "auto"):
     x = L.embed_fwd(params["embed"], token[:, None])
     x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
@@ -327,9 +338,17 @@ def decode_step(params, token, cfg, cache, impl: str = "auto"):
     return logits, {"mlstm": new_m, "slstm": new_s, "pos": cache["pos"] + 1}
 
 
-def prefill(params, tokens, cfg, cache, impl: str = "auto"):
+def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None):
     """Parallel prefill: chunkwise mLSTM + sequential sLSTM over the prompt,
-    emitting every block's recurrent state for subsequent decode."""
+    emitting every block's recurrent state for subsequent decode.
+
+    Recurrent state folds every input position in, so right-padding would
+    corrupt it — ragged (`lengths`) prefill is rejected; the serve engine
+    splits mixed-length waves into equal-length sub-batches instead."""
+    if lengths is not None:
+        raise NotImplementedError(
+            "xlstm prefill is recurrent: padded positions would enter the "
+            "state. Batch equal-length prompts only (ragged_prefill=False).")
     b, s = tokens.shape
     x = L.embed_fwd(params["embed"], tokens)
     x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)

@@ -1,7 +1,11 @@
-"""Serving engine: batched continuous decoding, AxLLM-quantized parity,
-int8 KV cache, slot reuse."""
+"""Serving engine: continuous-batching scheduler — ragged prefill waves,
+cache_spec slot insertion, EOS/stop conditions, long-prompt policy, partial
+results, AxLLM-quantized parity, int8 KV cache, slot reuse."""
+
+import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -73,3 +77,226 @@ def test_engine_on_recurrent_family():
     eng = ServeEngine(cfg, p, n_slots=2, max_len=64, quantize=True)
     outs = eng.generate([np.arange(6), np.arange(6) + 2], max_new=5)
     assert all(len(o) == 5 for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: ragged waves, occupancy, equivalence
+# ---------------------------------------------------------------------------
+
+def _direct_greedy(cfg, params, prompt, max_new, max_len=64):
+    """Reference decode: exact-length solo prefill + api.decode loop."""
+    api = get_model(cfg)
+    cache = api.init_cache(1, max_len)
+    prompt = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, cache = api.prefill(params, {"tokens": prompt}, cache)
+    toks = [int(jnp.argmax(logits[0, : cfg.vocab_size]))]
+    while len(toks) < max_new:
+        logits, cache = api.decode(
+            params, jnp.asarray([toks[-1]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(logits[0, : cfg.vocab_size])))
+    return toks
+
+
+MIXED = [np.arange(8), np.arange(12) + 3, np.arange(31) + 7,
+         np.arange(12) + 40, np.arange(8) + 60, np.arange(31) + 90]
+
+
+def test_mixed_length_stream_full_occupancy(params):
+    """Lengths 8/12/31, more requests than slots: one padded wave per
+    admission, slots never idle between waves."""
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    outs = eng.generate(MIXED, max_new=4)
+    assert len(outs) == 6 and all(len(o) == 4 for o in outs)
+    st = eng.stats
+    assert st.admitted == 6 and st.finished == 6 and st.truncated == 0
+    assert st.mean_occupancy == 1.0           # 6 requests drain 2 slots evenly
+    assert st.tokens_per_step == 2.0
+    assert st.prefill_waves >= 3
+    # ragged: one wave admits mixed lengths together, so far fewer waves
+    # than distinct (wave, length) pairs
+    assert st.prefill_compiles <= len(eng._prefill_cache) + 1
+
+
+def test_ragged_prefill_matches_direct_decode(params):
+    """Padded mixed-length batched prefill must equal exact-length solo
+    prefill + decode (the masking/cursor contract)."""
+    eng = ServeEngine(CFG, params, n_slots=3, max_len=64)
+    outs = eng.generate(MIXED[:3], max_new=6)
+    for p, o in zip(MIXED[:3], outs):
+        assert o == _direct_greedy(CFG, params, p, 6)
+
+
+def test_quantized_engine_matches_direct_quantized_decode(params):
+    """End-to-end: engine(quantize=True) == api.decode greedy on the same
+    deploy-quantized params."""
+    from repro.core.axllm_linear import deploy_quantize
+    from repro.core.quantization import QuantConfig
+    qp = deploy_quantize(params, QuantConfig(bits=8, mode="affine",
+                                             granularity="per_channel"))
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, quantize=True)
+    outs = eng.generate(MIXED[:2], max_new=6)
+    for p, o in zip(MIXED[:2], outs):
+        assert o == _direct_greedy(CFG, qp, p, 6)
+
+
+def test_nslots_collides_with_stacked_dim():
+    """Regression: n_slots == n_super on xLSTM. Shape-guessing slot writes
+    picked the superblock axis and corrupted the cache; cache_spec pins the
+    batch axis."""
+    cfg = ModelConfig(name="sx4", family="ssm", n_layers=4, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+                      vocab_pad_multiple=64, xlstm_slstm_every=2,
+                      dtype="float32", remat=False)
+    p = get_model(cfg).init(jax.random.PRNGKey(1))
+    prompts = [np.arange(6), np.arange(6) + 50, np.arange(6) + 100]
+    eng = ServeEngine(cfg, p, n_slots=2, max_len=64)   # n_super == n_slots
+    outs = eng.generate(prompts, max_new=5)
+    for pr, o in zip(prompts, outs):
+        solo = ServeEngine(cfg, p, n_slots=1, max_len=64)
+        assert o == solo.generate([pr], max_new=5)[0]
+
+
+def test_cache_spec_matches_shape_inference():
+    """Every family's cache_spec names exactly the axis that changes with
+    batch size (checked abstractly, no allocation)."""
+    cfgs = [
+        CFG,
+        dataclasses.replace(CFG, quant_kv=True),
+        ModelConfig(name="i-ssm", family="ssm", n_layers=4, d_model=64,
+                    n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+                    vocab_pad_multiple=64, xlstm_slstm_every=2,
+                    dtype="float32"),
+        ModelConfig(name="i-hyb", family="hybrid", n_layers=5, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                    head_dim=16, vocab_pad_multiple=64, ssm_state=16,
+                    ssm_head_dim=16, hybrid_attn_every=2, dtype="float32"),
+        ModelConfig(name="i-aud", family="audio", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+                    head_dim=16, vocab_pad_multiple=64,
+                    is_encoder_decoder=True, n_enc_layers=1, enc_seq=9,
+                    d_feat=4, dtype="float32"),
+    ]
+    for cfg in cfgs:
+        api = get_model(cfg)
+        c3 = jax.eval_shape(lambda a=api: a.init_cache(3, 16))
+        c5 = jax.eval_shape(lambda a=api: a.init_cache(5, 16))
+
+        def check(a, b, ax):
+            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                    if x != y]
+            assert diff == [ax], (cfg.name, a.shape, b.shape, ax)
+
+        jax.tree_util.tree_map(check, c3, c5, api.cache_spec)
+
+
+def test_engine_on_hybrid_family_mixed_lengths():
+    """Hybrid (Mamba + shared-attn sites, remainder layers): equal-length
+    sub-waves + cache_spec writes across attn/conv/ssm/*_rem leaves."""
+    cfg = ModelConfig(name="shy", family="hybrid", n_layers=5, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, ssm_state=16,
+                      ssm_head_dim=16, hybrid_attn_every=2,
+                      dtype="float32", remat=False)
+    p = get_model(cfg).init(jax.random.PRNGKey(2))
+    prompts = [np.arange(6), np.arange(9) + 20, np.arange(6) + 40]
+    eng = ServeEngine(cfg, p, n_slots=2, max_len=64)
+    outs = eng.generate(prompts, max_new=4)
+    assert all(len(o) == 4 for o in outs)
+    for pr, o in zip(prompts, outs):
+        solo = ServeEngine(cfg, p, n_slots=1, max_len=64)
+        assert o == solo.generate([pr], max_new=4)[0]
+
+
+# ---------------------------------------------------------------------------
+# Stop conditions
+# ---------------------------------------------------------------------------
+
+def test_eos_early_exit_frees_slot(params):
+    base_eng = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    prompts = [np.arange(8), np.arange(8) + 30, np.arange(8) + 77]
+    base = base_eng.generate(prompts, max_new=8)
+    eos = base[0][2]
+    idx = base[0].index(eos)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, eos_id=eos)
+    outs = eng.generate(prompts, max_new=8)
+    assert outs[0] == base[0][: idx + 1]       # stops right after EOS
+    assert len(outs) == 3 and eng.stats.finished == 3
+    # the freed slot admits request 3 earlier, so the stream drains in
+    # fewer decode steps than the no-EOS run
+    assert eng.stats.steps < base_eng.stats.steps
+
+
+def test_eos_on_first_prefill_token(params):
+    eng0 = ServeEngine(CFG, params, n_slots=1, max_len=64)
+    first = eng0.generate([np.arange(8)], max_new=4)[0][0]
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=64, eos_id=first)
+    reqs = eng.generate([np.arange(8)], max_new=4, return_requests=True)
+    assert reqs[0].tokens == [first] and reqs[0].done
+    assert eng.stats.steps == 0                # never occupied a decode slot
+
+
+# ---------------------------------------------------------------------------
+# Long prompts + partial results
+# ---------------------------------------------------------------------------
+
+def test_long_prompt_reject(params):
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=16,
+                      long_prompt="reject")
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(np.arange(20))
+
+
+def test_long_prompt_truncate_and_cache_full(params):
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=16)
+    reqs = eng.generate([np.arange(40)], max_new=8, return_requests=True)
+    r = reqs[0]
+    assert r.prompt_truncated and len(r.prompt) == 15   # kept the tail
+    assert np.array_equal(r.prompt, np.arange(40)[-15:])
+    # 15 prompt positions + 1 decode write fills the 16-entry cache
+    assert r.truncated and len(r.tokens) == 2
+
+
+def test_partial_results_when_steps_exhausted(params):
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    prompts = [np.arange(8) + i for i in range(5)]
+    reqs = eng.generate(prompts, max_new=8, max_steps=3,
+                        return_requests=True)
+    assert len(reqs) == 5                      # no KeyError on in-flight rows
+    assert len(reqs[0].tokens) == 4 and reqs[0].truncated
+    assert reqs[4].tokens == [] and reqs[4].truncated
+    assert eng.stats.truncated == 5            # cancelled requests counted
+    # cancelled requests are evicted: a later generate() on the same engine
+    # starts clean and must not resume/mutate already-returned results
+    before = list(reqs[0].tokens)
+    fresh = eng.generate([np.arange(8)], max_new=2)
+    assert reqs[0].tokens == before and len(fresh[0]) == 2
+    # plain generate() returns the same partial token lists
+    eng2 = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    outs = eng2.generate(prompts, max_new=8, max_steps=3)
+    assert outs == [r.tokens for r in reqs]
+
+
+def test_step_driver_drains_prefill_only_requests(params):
+    """External `while eng.step()` loops (the serve_bench driver) must not
+    strand queued requests when a whole wave finishes at prefill."""
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    for i in range(6):
+        eng.submit(np.arange(8) + i, max_new=1)    # all finish at prefill
+    while eng.step():
+        pass
+    assert eng.stats.finished == 6 and not eng.queue
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_rank_safe(params):
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=16)
+    logits3 = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 320))
+    got = eng._sample(logits3)
+    want = np.asarray(jnp.argmax(logits3[:, -1, : CFG.vocab_size], -1))
+    assert np.array_equal(got, want)
+    eng.greedy = False
+    draw = eng._sample(logits3)
+    assert draw.shape == (2,) and (draw < CFG.vocab_size).all()
