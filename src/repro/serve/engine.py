@@ -1,17 +1,46 @@
-"""Batched serving engine with slot-based continuous batching (lite).
+"""Continuous-batching serving engine (the AxLLM deployment surface).
 
-The AxLLM deployment surface: `ServeEngine(..., quantize=True)` converts the
-trained params post-training (zero setup, paper §I) to int8 codes and every
-linear runs through the fused dequant-matmul path. Decoding is batched across
-`n_slots` request slots; finished slots are freed and refilled from the
-queue. Prefill runs per-wave (all pending requests padded to a common length)
-and is written into the batched cache slot-wise; decode advances all active
-slots one token per `step()`.
+`ServeEngine(..., quantize=True)` converts trained params post-training
+(zero setup, paper §I) to int8 codes; every linear then runs the fused
+dequant-matmul path. The scheduler keeps `n_slots` request slots full:
 
-Slot insertion handles any cache pytree: every array whose dim-k equals
-n_slots at the engine's recorded batch axis is written at that axis (cache
-layouts put batch right after the stacked-layer leading dims; we detect the
-axis once from init_cache shapes).
+Scheduler contract
+------------------
+- **Admission (prefill waves).** Every `step()` first admits queued
+  requests into free slots. Attention-family models (`api.ragged_prefill`)
+  take mixed-length prompts in ONE right-padded batch: causal masking
+  keeps real tokens from seeing the pads, logits are gathered at each
+  row's last real position, and the per-row cache cursor is set to the
+  true length (pad KV beyond the cursor is dead and overwritten by
+  decode). Recurrent families (ssm/hybrid) fold every position into
+  state, so the wave is split into equal-length sub-batches — slots still
+  fill in the same step.
+- **Cache layout.** Slot insertion is driven by `api.cache_spec`, a
+  pytree (same treedef as the cache) giving the batch axis of every leaf.
+  This replaces shape-guessing (`shape[i] == n_slots`), which silently
+  corrupted the cache whenever `n_slots` collided with a stacked-layer /
+  head dim (e.g. xLSTM superblocks).
+- **Hot loops.** Prefill is jitted and bucketed by `(wave_size,
+  padded_len)`. Ragged families round both up to powers of two, so a
+  steady mixed stream hits a handful of compiles
+  (`stats.prefill_compiles`); recurrent families bucket wave size only —
+  padded_len is the exact group length, i.e. one compile per distinct
+  prompt length. Decode is one jitted call per step over all slots with
+  the cache buffer donated.
+- **Stop conditions.** Per-slot: EOS token (`eos_id`, engine arg or
+  `cfg.eos_id`), `max_new` tokens, or cache-full (`prompt + generated`
+  reaching `max_len` — flagged `truncated`). Finished slots free at the
+  end of the step and refill on the next.
+- **Long prompts.** `long_prompt="truncate"` keeps the last
+  `max_len - 1` prompt tokens (flagging `prompt_truncated`);
+  `"reject"` raises at `submit()`. Nothing silently overflows the cache.
+- **Stats.** `engine.stats` tracks admitted/finished/truncated requests,
+  decode steps/tokens, prefill waves/tokens/compiles and mean slot
+  occupancy; `stats.as_dict()` feeds `benchmarks/serve_bench.py`.
+
+`generate()` returns token lists for all submitted prompts; requests
+still in flight when `max_steps` runs out come back with their partial
+tokens and `truncated=True` (`return_requests=True` exposes the flags).
 """
 
 from __future__ import annotations
@@ -32,29 +61,64 @@ from repro.models.model import ModelAPI, get_model
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray            # [S] int32
+    prompt: np.ndarray            # [S] int32 (post long-prompt policy)
     max_new: int = 32
     tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False           # generation cut short (cache/steps)
+    prompt_truncated: bool = False    # prompt clipped by long_prompt policy
 
 
-def _batch_axis_of(shape, n_slots, max_len):
-    """First axis equal to n_slots (skipping stacked-layer leading dims that
-    could coincide is resolved by preferring the axis whose next dim is
-    max_len when present)."""
-    cands = [i for i, d in enumerate(shape) if d == n_slots]
-    if not cands:
-        return None
-    for i in cands:
-        if i + 1 < len(shape) and shape[i + 1] == max_len:
-            return i
-    return cands[0]
+@dataclasses.dataclass
+class EngineStats:
+    admitted: int = 0
+    finished: int = 0
+    truncated: int = 0
+    steps: int = 0
+    decode_tokens: int = 0
+    prefill_waves: int = 0
+    prefill_tokens: int = 0
+    prefill_compiles: int = 0
+    occupancy_sum: float = 0.0        # sum over steps of active/n_slots
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    @property
+    def tokens_per_step(self) -> float:
+        return self.decode_tokens / self.steps if self.steps else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["mean_occupancy"] = self.mean_occupancy
+        d["tokens_per_step"] = self.tokens_per_step
+        return d
+
+
+def _pow2_bucket(n: int, lo: int, hi: int) -> int:
+    """Smallest power of two >= n, floored at lo, capped at hi."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, hi)
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 512,
                  quantize: bool = False, quant_bits: int = 8,
-                 impl: str = "auto", greedy: bool = True, seed: int = 0):
+                 impl: str = "auto", greedy: bool = True, seed: int = 0,
+                 eos_id: Optional[int] = None,
+                 long_prompt: str = "truncate"):
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "ServeEngine drives token-only prefill; encoder-decoder "
+                "serving needs a frames ingress (future PR)")
+        if long_prompt not in ("truncate", "reject"):
+            raise ValueError(f"long_prompt must be 'truncate' or 'reject', "
+                             f"got {long_prompt!r}")
+        if max_len < 2:
+            raise ValueError("max_len must be >= 2 (prompt + 1 decode step)")
         self.cfg = cfg
         self.api: ModelAPI = get_model(cfg, impl=impl)
         if quantize:
@@ -65,18 +129,52 @@ class ServeEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.greedy = greedy
+        self.eos_id = eos_id if eos_id is not None else cfg.eos_id
+        self.long_prompt = long_prompt
         self.rng = jax.random.PRNGKey(seed)
         self.cache = self.api.init_cache(n_slots, max_len)
+        self._validate_cache_spec()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self._rid = 0
-        self._decode = jax.jit(self.api.decode)
-        self._prefill_cache = {}
+        self.stats = EngineStats()
+        self._decode = jax.jit(self.api.decode, donate_argnums=(2,))
+        self._prefill_cache = {}      # (wave_bucket, padded_len) -> jit fn
+        self._writer = jax.jit(self._write_wave, donate_argnums=(0,))
+
+    def _validate_cache_spec(self):
+        spec = self.api.cache_spec
+        if spec is None:
+            raise ValueError("ModelAPI.cache_spec missing: the engine needs "
+                             "the batch axis of every cache leaf")
+
+        def check(leaf, ax):
+            if leaf.shape[ax] != self.n_slots:
+                raise ValueError(
+                    f"cache_spec says batch axis {ax} but leaf shape "
+                    f"{leaf.shape} has {leaf.shape[ax]} != n_slots="
+                    f"{self.n_slots} there")
+            return leaf
+
+        jax.tree_util.tree_map(check, self.cache, spec)
 
     # -- request management ---------------------------------------------------
     def submit(self, prompt, max_new: int = 32) -> int:
-        req = Request(self._rid, np.asarray(prompt, np.int32), max_new)
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        cap = self.max_len - 1            # leave >= 1 decode position
+        prompt_truncated = False
+        if prompt.size > cap:
+            if self.long_prompt == "reject":
+                raise ValueError(
+                    f"prompt length {prompt.size} exceeds max_len-1={cap}; "
+                    f"resubmit shorter or use long_prompt='truncate'")
+            prompt = prompt[-cap:]        # keep the most recent context
+            prompt_truncated = True
+        req = Request(self._rid, prompt, max_new,
+                      prompt_truncated=prompt_truncated)
         self._rid += 1
         self.queue.append(req)
         return req.rid
@@ -84,50 +182,124 @@ class ServeEngine:
     def _free_slots(self):
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    # -- prefill wave ----------------------------------------------------------
+    # -- prefill waves ---------------------------------------------------------
     def _admit(self):
         free = self._free_slots()
         if not free or not self.queue:
             return
-        # one wave = equal-length prompts (exact positions without padding
-        # bookkeeping; mixed lengths wait for the next wave)
-        length = len(self.queue[0].prompt)
-        wave = [r for r in self.queue if len(r.prompt) == length][: len(free)]
-        for r in wave:
-            self.queue.remove(r)
-        toks = np.stack([r.prompt for r in wave])
-        wave_cache = self.api.init_cache(len(wave), self.max_len)
-        logits, wave_cache = self.api.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, wave_cache)
+        take = self.queue[: len(free)]
+        del self.queue[: len(take)]
+        if self.api.ragged_prefill:
+            groups = [take]
+        else:
+            by_len = {}
+            for r in take:
+                by_len.setdefault(len(r.prompt), []).append(r)
+            groups = list(by_len.values())
+        for group in groups:
+            self._prefill_group(group, free)
+
+    def _get_prefill(self, wave_bucket: int, padded_len: int):
+        key = (wave_bucket, padded_len)
+        if key not in self._prefill_cache:
+            api, max_len = self.api, self.max_len
+            if api.ragged_prefill:
+                def fn(params, toks, lengths):
+                    cache = api.init_cache(toks.shape[0], max_len)
+                    return api.prefill(params, {"tokens": toks}, cache,
+                                       lengths=lengths)
+            else:
+                def fn(params, toks, lengths):
+                    cache = api.init_cache(toks.shape[0], max_len)
+                    return api.prefill(params, {"tokens": toks}, cache)
+            self._prefill_cache[key] = jax.jit(fn)
+            self.stats.prefill_compiles += 1
+        return self._prefill_cache[key]
+
+    def _prefill_group(self, group: List[Request], free: List[int]):
+        w = len(group)
+        wb = _pow2_bucket(w, 1, self.n_slots)
+        lens = [len(r.prompt) for r in group]
+        if self.api.ragged_prefill:
+            pl = _pow2_bucket(max(lens), min(8, self.max_len), self.max_len)
+        else:
+            pl = lens[0]                  # equal-length group, exact
+        toks = np.zeros((wb, pl), np.int32)
+        lengths = np.ones((wb,), np.int32)
+        for i, r in enumerate(group):
+            toks[i, : len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+        fn = self._get_prefill(wb, pl)
+        logits, wave_cache = fn(self.params, jnp.asarray(toks),
+                                jnp.asarray(lengths))
         first = self._sample(logits)
-        for i, r in enumerate(wave):
-            slot = free[i]
-            self.slots[slot] = r
+        src, dst = [], []
+        for i, r in enumerate(group):
             r.tokens.append(int(first[i]))
-            self._write_slot(wave_cache, i, slot)
+            self.stats.admitted += 1
+            self.stats.prefill_tokens += int(lengths[i])
+            if self._stop_reason(r) is not None:
+                self._finish(r)           # EOS/max_new on the first token
+                continue
+            slot = free.pop(0)
+            self.slots[slot] = r
+            src.append(i)
+            dst.append(slot)
+        if src:
+            self.cache = self._writer(self.cache, wave_cache,
+                                      jnp.asarray(src, jnp.int32),
+                                      jnp.asarray(dst, jnp.int32))
+        self.stats.prefill_waves += 1
 
-    def _write_slot(self, wave_cache, src: int, dst: int):
-        def put(full, one):
-            ax = _batch_axis_of(full.shape, self.n_slots, self.max_len)
-            if ax is None:
-                return full
-            # the wave cache has the wave size at the same axis
-            src_slice = jax.lax.index_in_dim(one, src, ax, keepdims=False)
+    def _write_wave(self, cache, wave_cache, src, dst):
+        """Copy wave rows `src` into engine slots `dst` on each leaf's
+        declared batch axis (api.cache_spec)."""
+        def put(full, one, ax):
+            vals = jnp.take(one, src, axis=ax)
             idx = (slice(None),) * ax + (dst,)
-            return full.at[idx].set(src_slice.astype(full.dtype))
-        self.cache = jax.tree_util.tree_map(put, self.cache, wave_cache)
+            return full.at[idx].set(vals.astype(full.dtype))
+        return jax.tree_util.tree_map(put, cache, wave_cache,
+                                      self.api.cache_spec)
 
+    # -- sampling --------------------------------------------------------------
     def _sample(self, logits):
-        logits = logits[:, : self.cfg.vocab_size]
+        logits = jnp.asarray(logits)
+        if logits.ndim == 3:              # [B, S, V]: sample the last position
+            logits = logits[:, -1, :]
+        logits = logits[..., : self.cfg.vocab_size]
         if self.greedy:
             return np.asarray(jnp.argmax(logits, -1))
         self.rng, k = jax.random.split(self.rng)
         return np.asarray(jax.random.categorical(k, logits))
 
+    # -- stop conditions -------------------------------------------------------
+    def _stop_reason(self, r: Request) -> Optional[str]:
+        if self.eos_id is not None and r.tokens[-1] == self.eos_id:
+            return "eos"
+        if len(r.tokens) >= r.max_new:
+            return "max_new"
+        # next decode would write at pos = prompt + generated - 1
+        if len(r.prompt) + len(r.tokens) - 1 >= self.max_len:
+            r.truncated = True
+            return "cache_full"
+        return None
+
+    def _finish(self, r: Request):
+        r.done = True
+        self.finished.append(r)
+        self.stats.finished += 1
+        if r.truncated:
+            self.stats.truncated += 1
+
     # -- decode ----------------------------------------------------------------
-    def step(self):
+    def step(self) -> bool:
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
+        while not active and self.queue:
+            # a whole wave can finish at prefill (EOS/max_new on the first
+            # token); keep admitting so queued work is never stranded
+            self._admit()
+            active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return False
         last = np.zeros((self.n_slots,), np.int32)
@@ -136,23 +308,64 @@ class ServeEngine:
         logits, self.cache = self._decode(self.params, jnp.asarray(last),
                                           self.cache)
         nxt = self._sample(logits)
+        self.stats.steps += 1
+        self.stats.decode_tokens += len(active)
+        self.stats.occupancy_sum += len(active) / self.n_slots
         for i in active:
             r = self.slots[i]
             r.tokens.append(int(nxt[i]))
-            if len(r.tokens) >= r.max_new:
-                r.done = True
-                self.finished.append(r)
+            if self._stop_reason(r) is not None:
+                self._finish(r)
                 self.slots[i] = None
         return True
 
     def run(self, max_steps: int = 10000):
-        while (self.queue or any(self.slots)) and max_steps > 0:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and max_steps > 0:
             self.step()
             max_steps -= 1
         return self.finished
 
-    def generate(self, prompts, max_new: int = 32):
+    def generate(self, prompts, max_new: int = 32, max_steps: int = 10000,
+                 return_requests: bool = False):
+        """Serve `prompts`; returns one token list per prompt (in order).
+
+        Requests still in flight after `max_steps` are cancelled: they come
+        back with partial tokens and `truncated=True`, and their slots/queue
+        entries are released so a later `generate()` starts clean instead of
+        resuming (and mutating) already-returned results.
+        `return_requests=True` returns the Request objects (tokens +
+        truncated/prompt_truncated flags)."""
+        start = len(self.finished)
         ids = [self.submit(p, max_new) for p in prompts]
-        self.run()
-        by_id = {r.rid: r for r in self.finished}
-        return [by_id[i].tokens for i in ids]
+        want = set(ids)
+        self.run(max_steps)
+        new = self.finished[start:]
+        by_id = {r.rid: r for r in new}
+        out = []
+        for rid in ids:
+            r = by_id.get(rid)
+            if r is None:
+                r = self._cancel(rid)
+            out.append(r)
+        # results are handed to the caller — drop them from the engine log so
+        # a long-lived engine doesn't accumulate every request ever served
+        del self.finished[start:]
+        self.finished.extend(r for r in new if r.rid not in want)
+        return out if return_requests else [r.tokens for r in out]
+
+    def _cancel(self, rid: int) -> Request:
+        """Evict an in-flight/queued request, returning it flagged truncated."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self.slots[i] = None
+                s.truncated = True
+                self.stats.truncated += 1
+                return s
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue.remove(r)
+                r.truncated = True
+                self.stats.truncated += 1
+                return r
+        raise KeyError(f"request {rid} not found")
