@@ -1,7 +1,12 @@
 """Kernel-level microbench on the XLA fallback path (CPU container; the
 Pallas kernels target TPU and are validated in interpret mode). Measures the
-byte-traffic effect of the AxLLM representation: int8-code matmul vs bf16
-matmul wall time + the derived HBM-byte ratio the TPU roofline uses."""
+byte-traffic effect of the AxLLM representation (int8/int4 vs bf16 matmul),
+the fused-QKV projection vs three separate matmuls, chunked scan-decode vs
+the per-token dispatch loop, and sweeps the decode-shape block table
+(validating every (bm, bk, bn) choice in Pallas interpret mode).
+
+benchmarks/run.py persists these rows to BENCH_kernel.json at the repo root
+so the kernel perf trajectory accumulates per-commit."""
 
 from __future__ import annotations
 
@@ -10,13 +15,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, timeit
-from repro.core.quantization import QuantConfig, quantize
+from repro.core.quantization import QuantConfig, qconcat, quantize
 from repro.kernels import ops
 
 
-def run() -> list:
-    rows: list = []
-    rng = np.random.default_rng(0)
+def _matmul_rows(rows, rng):
     m, k, n = 8, 4096, 4096          # decode-like skinny matmul
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
@@ -37,6 +40,109 @@ def run() -> list:
                  f"weight_bytes={bytes_q8} ({bytes_fp/bytes_q8:.1f}x less)"))
     rows.append(("kernel/matmul_axllm_int4", t_q4,
                  f"weight_bytes={bytes_q4} ({bytes_fp/bytes_q4:.1f}x less)"))
+
+
+def _fused_qkv_rows(rows, rng):
+    """One [K, (H+2Hk)·hd] fused matmul vs three separate Q/K/V matmuls
+    (GQA shapes: the K/V projections are narrower than Q)."""
+    m, k = 8, 2048
+    n_q, n_kv = 2048, 512
+    qcfg = QuantConfig(8, "affine", "per_channel")
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    wq = quantize(jnp.asarray(rng.standard_normal((k, n_q)), jnp.float32),
+                  qcfg)
+    wk = quantize(jnp.asarray(rng.standard_normal((k, n_kv)), jnp.float32),
+                  qcfg)
+    wv = quantize(jnp.asarray(rng.standard_normal((k, n_kv)), jnp.float32),
+                  qcfg)
+    wqkv = qconcat([wq, wk, wv])
+
+    f3 = jax.jit(lambda a, q1, q2, q3: (
+        ops.axllm_matmul(a, q1, impl="ref"),
+        ops.axllm_matmul(a, q2, impl="ref"),
+        ops.axllm_matmul(a, q3, impl="ref")))
+    f1 = jax.jit(lambda a, q: ops.axllm_matmul(a, q, impl="ref"))
+    t3 = timeit(f3, x, wq, wk, wv)
+    t1 = timeit(f1, x, wqkv)
+    rows.append(("kernel/qkv_3matmuls", t3, "3 launches; 3 codebook loads"))
+    rows.append(("kernel/qkv_fused", t1,
+                 f"1 launch; {t3/max(t1, 1e-9):.2f}x vs separate"))
+
+
+def _chunked_decode_rows(rows):
+    """Per-token dispatch loop (host sync + sample every step) vs one
+    on-device decode_steps scan — the serve engine's hot-loop choice."""
+    from repro.configs.base import ModelConfig
+    from repro.models.model import get_model
+    from repro.serve.decode import decode_steps
+
+    cfg = ModelConfig(name="kb-decode", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, head_dim=16, vocab_pad_multiple=64,
+                      dtype="float32")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b, steps = 4, 16
+    cache = api.init_cache(b, 64)
+    toks = jnp.ones((b, 8), jnp.int32)
+    logits, cache = jax.jit(
+        lambda p, t, c: api.prefill(p, {"tokens": t}, c))(params, toks, cache)
+    last = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    dec = jax.jit(api.decode)
+
+    def per_token(params, last, cache):
+        for _ in range(steps):
+            lg, cache = dec(params, last, cache)
+            # host round-trip: sample in NumPy like the old engine loop
+            last = jnp.asarray(
+                np.argmax(np.asarray(lg[:, : cfg.vocab_size]), -1),
+                jnp.int32)
+        return last
+
+    chunk = jax.jit(lambda p, l, c, r: decode_steps(
+        api.decode, p, l, c, r, jnp.zeros((b,), bool),
+        jnp.ones((b,), jnp.int32), jnp.full((b,), steps + 1, jnp.int32),
+        n=steps, vocab_size=cfg.vocab_size, max_len=64).tokens)
+
+    rng = jax.random.PRNGKey(0)
+    t_loop = timeit(per_token, params, last, cache) / steps
+    t_scan = timeit(chunk, params, last, cache, rng) / steps
+    rows.append(("kernel/decode_per_token", t_loop,
+                 f"{steps} dispatches + host sampling"))
+    rows.append(("kernel/decode_chunked_scan", t_scan,
+                 f"1 dispatch; {t_loop/max(t_scan, 1e-9):.2f}x vs per-token"))
+
+
+def _block_table_rows(rows, rng):
+    """Decode-shape block-table sweep: every picked (bm, bk, bn) is
+    validated against the jnp oracle in Pallas interpret mode, and the
+    no-pad fast path (pad_m == 0 for m in 8..64 multiples of 8) is
+    asserted rather than trusted."""
+    k, n = 256, 256
+    qcfg = QuantConfig(8, "affine", "per_channel")
+    w = quantize(jnp.asarray(rng.standard_normal((k, n)), jnp.float32), qcfg)
+    for m in (1, 4, 8, 16, 24, 32, 48, 64, 100, 128):
+        bm, bk, bn, pad_m = ops.pick_blocks(m, k, n)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        y_ref = ops.axllm_matmul(x, w, impl="ref")
+        y_pal = ops.axllm_matmul(x, w, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                   rtol=2e-5, atol=2e-4)
+        if 8 <= m < 128 and m % 8 == 0:
+            assert pad_m == 0, f"m={m} should hit the no-pad fast path"
+        t = timeit(jax.jit(lambda a: ops.axllm_matmul(a, w, impl="ref")), x)
+        rows.append((f"kernel/blocks_m{m}", t,
+                     f"bm={bm};bk={bk};bn={bn};pad_m={pad_m};"
+                     f"interpret=ok"))
+
+
+def run() -> list:
+    rows: list = []
+    rng = np.random.default_rng(0)
+    _matmul_rows(rows, rng)
+    _fused_qkv_rows(rows, rng)
+    _chunked_decode_rows(rows)
+    _block_table_rows(rows, rng)
 
     # decode attention: bf16 KV vs int8 KV (bytes halve)
     b, s, h, hk, d = 4, 8192, 8, 2, 128

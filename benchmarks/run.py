@@ -1,19 +1,30 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows (benchmarks.common.Row). Modules:
+# CSV rows (benchmarks.common.Row) and persists every module's rows to
+# BENCH_kernel.json at the repo root (the artifact CI uploads — without it
+# the kernel bench trajectory was never recorded). Modules:
 #   fig1_breakdown    paper Fig. 1   layer computation shares
 #   fig8_reuse_rate   paper Fig. 8   reuse rate per model / buffer budget
 #   fig9_speedup      paper Fig. 9   AxLLM vs baseline cycles + absolutes
 #   lora_table        paper §V       LoRA overlap + adapter speedup
 #   shiftadd_compare  paper §V       vs ShiftAddLLM (cycles + exactness)
 #   power_table       paper §V       power/energy model
-#   kernel_bench      (framework)    int8/int4 vs f32 matmul + KV bytes
+#   kernel_bench      (framework)    int8/int4 vs f32 matmul, fused QKV,
+#                                    chunked decode, block-table sweep
 #   roofline_table    (deliverable g) per-cell roofline terms from dry-run
 #   serve_bench       (framework)    continuous-batching tok/s + occupancy
+#
+#   python benchmarks/run.py [substring]   # run only matching modules
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:   # allow `python benchmarks/run.py` directly
+    sys.path.insert(0, _REPO_ROOT)
 
 
 def main() -> None:
@@ -25,6 +36,19 @@ def main() -> None:
                shiftadd_compare, power_table, kernel_bench, roofline_table,
                serve_bench]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    out = os.path.join(_REPO_ROOT, "BENCH_kernel.json")
+    # merge into any existing report so a filtered run (e.g.
+    # `run.py kernel_bench`) refreshes only its own modules instead of
+    # clobbering the accumulated trajectory
+    report = {"rows": {}, "errors": {}}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                prev = json.load(f)
+            report["rows"] = dict(prev.get("rows", {}))
+            report["errors"] = dict(prev.get("errors", {}))
+        except (OSError, ValueError):
+            pass
     print("name,us_per_call,derived")
     for mod in modules:
         name = mod.__name__.split(".")[-1]
@@ -35,11 +59,19 @@ def main() -> None:
             rows = mod.run()
         except Exception as e:  # keep the harness robust mid-development
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            report["errors"][name] = f"{type(e).__name__}: {e}"
             continue
+        report["errors"].pop(name, None)
+        report["rows"][name] = [
+            [r[0], round(float(r[1]), 2), str(r[2])] for r in rows]
         for r in rows:
             derived = str(r[2]).replace(",", ";")
             print(f"{r[0]},{r[1]:.2f},{derived}")
         print(f"{name}/_elapsed,{(time.time()-t0)*1e6:.0f},-")
+    report["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

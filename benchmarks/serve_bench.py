@@ -1,8 +1,16 @@
 """Continuous-batching serve throughput benchmark -> BENCH_serve.json.
 
-Drives the ServeEngine scheduler step-by-step over a mixed-length synthetic
-request stream (ragged prefill waves) in both bf16 and AxLLM-int8 modes and
-records the throughput/occupancy trajectory:
+Drives the ServeEngine scheduler over a mixed-length synthetic request
+stream on the repro_100m config (its CPU-scale ``reduced()`` variant — the
+full 100M-parameter model does not fit a CI time budget) and records the
+throughput/occupancy trajectory across the serving modes that matter for
+the decode hot path:
+
+  - bf16 vs AxLLM-int8 weights (the paper's deployment conversion)
+  - decode_chunk=1 (per-token host round-trip) vs decode_chunk=8 (one
+    on-device lax.scan dispatch per 8 tokens) — ``decode_chunk_speedup``
+    records tok/s(chunk8) / tok/s(chunk1) per mode
+  - fused wqkv/gate_up projections on top of int8 + chunked decode
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
 
@@ -17,27 +25,33 @@ import argparse
 import json
 import time
 
-SMOKE = dict(d_model=64, n_layers=2, vocab=256, n_slots=2, max_len=64,
-             requests=6, max_new=4, prompt_lens=(8, 12, 31))
-FULL = dict(d_model=128, n_layers=4, vocab=512, n_slots=8, max_len=256,
-            requests=48, max_new=32, prompt_lens=(8, 12, 31, 64, 96))
+SMOKE = dict(n_slots=2, max_len=64, requests=6, max_new=16,
+             prompt_lens=(8, 12, 31))
+FULL = dict(n_slots=4, max_len=256, requests=32, max_new=32,
+            prompt_lens=(8, 12, 31, 64, 96))
+
+# (label, quantize, decode_chunk, fuse_qkv)
+MODES = [
+    ("bf16/chunk1", False, 1, False),
+    ("bf16/chunk8", False, 8, False),
+    ("axllm-int8/chunk1", True, 1, False),
+    ("axllm-int8/chunk8", True, 8, False),
+    ("axllm-int8/chunk8/fused", True, 8, True),
+]
 
 
-def _build(p):
+def _build():
     import jax
-    from repro.configs.base import ModelConfig
+    from repro.configs.repro_100m import CONFIG
     from repro.models.model import get_model
 
-    cfg = ModelConfig(name="serve-bench", family="dense",
-                      n_layers=p["n_layers"], d_model=p["d_model"],
-                      n_heads=4, n_kv_heads=2, d_ff=2 * p["d_model"],
-                      vocab_size=p["vocab"], head_dim=16,
-                      vocab_pad_multiple=64, dtype="float32")
+    cfg = CONFIG.reduced(dtype="float32", remat=False)
     params = get_model(cfg).init(jax.random.PRNGKey(0))
     return cfg, params
 
 
-def _serve(cfg, params, p, quantize: bool):
+def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
+           fuse_qkv: bool):
     import numpy as np
     from repro.serve.engine import ServeEngine
 
@@ -49,18 +63,18 @@ def _serve(cfg, params, p, quantize: bool):
                                     size=lens[i % len(lens)])
                        .astype(np.int32), max_new=p["max_new"])
 
+    def make():
+        return ServeEngine(cfg, params, n_slots=p["n_slots"],
+                           max_len=p["max_len"], quantize=quantize,
+                           decode_chunk=decode_chunk, fuse_qkv=fuse_qkv)
+
     # untimed warmup pass: the timed engine inherits the jitted
-    # prefill-bucket/decode/writer callables, so the trajectory below is
-    # compile-free steady state
-    warm = ServeEngine(cfg, params, n_slots=p["n_slots"],
-                       max_len=p["max_len"], quantize=quantize)
+    # prefill-bucket/chunk-decode/writer callables, so the trajectory below
+    # is compile-free steady state
+    warm = make()
     submit_stream(warm)
     warm.run()
-    eng = ServeEngine(cfg, params, n_slots=p["n_slots"],
-                      max_len=p["max_len"], quantize=quantize)
-    eng._prefill_cache = warm._prefill_cache
-    eng._decode = warm._decode
-    eng._writer = warm._writer
+    eng = make().adopt_compiled(warm)
     submit_stream(eng)
 
     traj = []
@@ -69,7 +83,7 @@ def _serve(cfg, params, p, quantize: bool):
     while eng.step():
         traj.append({
             "step": eng.stats.steps,
-            "active": eng.stats.decode_tokens - decoded,  # slots decoded
+            "tokens": eng.stats.decode_tokens - decoded,  # this chunk
             "queued": len(eng.queue),
         })
         decoded = eng.stats.decode_tokens
@@ -86,15 +100,21 @@ def _serve(cfg, params, p, quantize: bool):
 
 def bench(smoke: bool = True) -> dict:
     p = SMOKE if smoke else FULL
-    cfg, params = _build(p)
+    cfg, params = _build()
     report = {
         "smoke": smoke,
+        "config": "repro-100m (reduced CPU-scale variant)",
         "workload": {k: (list(v) if isinstance(v, tuple) else v)
                      for k, v in p.items()},
         "modes": {},
+        "decode_chunk_speedup": {},
     }
-    for label, quant in (("bf16", False), ("axllm-int8", True)):
-        report["modes"][label] = _serve(cfg, params, p, quant)
+    for label, quant, chunk, fuse in MODES:
+        report["modes"][label] = _serve(cfg, params, p, quant, chunk, fuse)
+    for base in ("bf16", "axllm-int8"):
+        t1 = report["modes"][f"{base}/chunk1"]["tokens_per_sec"]
+        t8 = report["modes"][f"{base}/chunk8"]["tokens_per_sec"]
+        report["decode_chunk_speedup"][base] = round(t8 / t1, 2) if t1 else 0.0
     return report
 
 
@@ -107,13 +127,15 @@ def run():
         rows.append((f"serve/{label}", us,
                      f"tok/s={m['tokens_per_sec']};"
                      f"occ={m['stats']['mean_occupancy']:.2f}"))
+    for base, s in rep["decode_chunk_speedup"].items():
+        rows.append((f"serve/{base}/chunk_speedup", 0.0, f"{s}x"))
     return rows
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny config for CI (seconds, not minutes)")
+                    help="tiny workload for CI (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     rep = bench(smoke=args.smoke)
@@ -124,7 +146,10 @@ def main(argv=None):
         print(f"[{label}] {m['generated_tokens']} tokens "
               f"{m['tokens_per_sec']} tok/s "
               f"occupancy {m['stats']['mean_occupancy']:.2f} "
-              f"({m['stats']['steps']} steps)")
+              f"({m['stats']['steps']} steps, "
+              f"{m['stats']['decode_chunks']} dispatches)")
+    for base, s in rep["decode_chunk_speedup"].items():
+        print(f"decode_chunk=8 vs 1 [{base}]: {s}x tok/s")
     print(f"wrote {args.out}")
 
 

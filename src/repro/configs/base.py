@@ -69,6 +69,8 @@ class ModelConfig:
     # --- AxLLM serving -------------------------------------------------------
     quant_bits: int = 8                   # serve-path weight codes
     quant_kv: bool = False                # int8 KV cache (beyond-paper lever)
+    fuse_qkv: bool = False                # fused wqkv/gate_up projections
+    decode_chunk: int = 8                 # on-device decode steps per dispatch
     shard_cache_seq: bool = True          # shard KV seq dim when kv heads < axis
     eos_id: Optional[int] = None          # serve-path stop token (None: run to max_new)
 

@@ -30,6 +30,23 @@ def linear(x: Array, w, *, impl: str = "auto", out_dtype=None) -> Array:
     return y if out_dtype is None else y.astype(out_dtype)
 
 
+def concat_weights(ws) -> Array:
+    """Concatenate linear weights along the output dim for a fused
+    projection. All-dense concatenates arrays; all-QTensor routes through
+    :func:`repro.core.quantization.qconcat` (exact — scales travel with
+    their columns). Mixing the two is an error: fuse after
+    `deploy_quantize`, not across the quantization boundary."""
+    ws = list(ws)
+    n_q = sum(isinstance(w, QTensor) for w in ws)
+    if n_q == len(ws):
+        from repro.core.quantization import qconcat
+        return qconcat(ws)
+    if n_q:
+        raise TypeError("concat_weights: cannot fuse a mix of QTensor and "
+                        "dense weights — quantize first, then fuse")
+    return jnp.concatenate(ws, axis=-1)
+
+
 @dataclasses.dataclass(frozen=True)
 class LoRAConfig:
     rank: int = 16

@@ -302,6 +302,67 @@ def dequantize(qt: QTensor, dtype=jnp.float32) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Concatenation (fused-projection support)
+# ---------------------------------------------------------------------------
+
+def qconcat(qts) -> QTensor:
+    """Concatenate QTensors along the output (N) axis without requantizing.
+
+    This is the substrate of the fused-QKV / fused-gate-up projections: a
+    single ``[K, N1+N2+...]`` AxLLM matmul replaces several ``[K, Ni]``
+    matmuls over the same activations (one activation pass, one codebook
+    residency in the kernel). Exactness: per-channel scales travel with
+    their columns, so ``dequantize(qconcat(a, b)) ==
+    concat(dequantize(a), dequantize(b))`` bit-for-bit.
+
+    Inputs must share K (and any leading stacked dims), bits, mode, packing
+    and — for per_group — group_size. Mixing per_tensor/per_channel inputs
+    is allowed: per_tensor scales broadcast over their columns and the
+    result is per_channel. per_group inputs must all be per_group.
+    """
+    qts = list(qts)
+    if len(qts) < 2:
+        raise ValueError("qconcat needs at least two QTensors")
+    q0 = qts[0]
+    for qt in qts[1:]:
+        if not isinstance(qt, QTensor):
+            raise TypeError(f"qconcat expects QTensors, got {type(qt)}")
+        if (qt.bits, qt.mode, qt.packed) != (q0.bits, q0.mode, q0.packed):
+            raise ValueError(
+                f"qconcat mismatch: ({qt.bits},{qt.mode},{qt.packed}) vs "
+                f"({q0.bits},{q0.mode},{q0.packed})")
+        if qt.shape[:-1] != q0.shape[:-1]:
+            raise ValueError(f"qconcat K/leading mismatch: {qt.shape} vs "
+                             f"{q0.shape}")
+    grans = {qt.granularity for qt in qts}
+    if "per_group" in grans:
+        if grans != {"per_group"}:
+            raise ValueError("qconcat cannot mix per_group with other "
+                             "granularities")
+        if len({qt.group_size for qt in qts}) != 1:
+            raise ValueError("qconcat per_group inputs need one group_size")
+        granularity = "per_group"
+        scale = jnp.concatenate([qt.scale for qt in qts], axis=-1)
+    else:
+        # per_tensor folds into per_channel: broadcast each input's scale
+        # over its own columns, then concatenate along the channel dim
+        granularity = "per_channel"
+        lead = q0.shape[:-2]
+        scale = jnp.concatenate(
+            [jnp.broadcast_to(qt.scale.astype(jnp.float32),
+                              (*lead, 1, qt.shape[-1])) for qt in qts],
+            axis=-1)
+    if q0.packed and any(qt.shape[-1] % 2 for qt in qts):
+        raise ValueError("packed qconcat inputs need even output dims")
+    codes = jnp.concatenate([qt.codes for qt in qts], axis=-1)
+    out = sum(qt.shape[-1] for qt in qts)
+    return QTensor(codes=codes, scale=scale, codebook=None, bits=q0.bits,
+                   mode=q0.mode, granularity=granularity,
+                   group_size=q0.group_size, packed=q0.packed,
+                   shape=(*q0.shape[:-1], out))
+
+
+# ---------------------------------------------------------------------------
 # Pytree-level helpers (deploy-time conversion of a trained model)
 # ---------------------------------------------------------------------------
 

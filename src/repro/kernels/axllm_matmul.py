@@ -36,6 +36,13 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 
 DEFAULT_BLOCKS = (128, 512, 256)  # (bm, bk, bn)
 
+# Decode-shape M blocks, preferred order. Serving batches are small
+# (m = n_slots·decode tokens, typically 1..64); picking the largest entry
+# that divides m exactly gives a no-pad fast path for m ∈ {8..64} instead
+# of rounding every call up to the 128-row tile. Skinny-m launches pair
+# with a widened bn (ops.pick_blocks) to keep the MXU busy.
+SKINNY_BM = (64, 32, 16, 8)
+
 
 def _dequant_tile(codes, scale_tile, codebook, bits: int, group_size: int):
     """codes [bk, bn] int -> w f32 [bk, bn], inside the kernel (VMEM)."""

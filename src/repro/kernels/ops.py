@@ -61,13 +61,39 @@ def _kernel_scale(qt: QTensor) -> jax.Array:
     return s.astype(jnp.float32)
 
 
-def _pick_blocks(m: int, k: int, n: int, group_size: int, per_group: bool):
-    bm = 128 if m >= 128 else max(8, 1 << (m - 1).bit_length())
-    bk = min(512, k)
-    bn = min(256, n)
+def _divisor_block(dim: int, target: int) -> int:
+    """Largest power-of-two block <= target that divides dim (fallback:
+    the dim itself, i.e. a single block)."""
+    for b in (512, 256, 128, 64, 32, 16, 8):
+        if b <= target and b <= dim and dim % b == 0:
+            return b
+    return dim
+
+
+def pick_blocks(m: int, k: int, n: int, group_size: int = 128,
+                per_group: bool = False):
+    """Block-size table for the fused dequant-matmul: (bm, bk, bn, pad_m).
+
+    The pad decision is part of the table: decode shapes (m < 128) pick the
+    largest SKINNY_BM entry that divides m exactly, so m ∈ {8,16,...,64}
+    (n_slots · decode tokens) hits a no-pad fast path instead of being
+    silently re-padded on every call. Skinny launches widen bn to 512 (vs
+    the 256 default) to keep the MXU fed from the N grid dimension — the
+    per-tile VMEM footprint stays far under budget because the x tile
+    shrinks with bm.
+    """
+    if m >= 128:
+        bm = 128
+    else:
+        bm = next((b for b in _amm.SKINNY_BM if m % b == 0), 8)
+    bk = _divisor_block(k, 512)
+    bn = _divisor_block(n, 512 if bm <= 32 else 256)
     if per_group:
-        bk = max(group_size, (bk // group_size) * group_size)
-    return bm, bk, bn
+        g_bk = (bk // group_size) * group_size
+        if g_bk <= 0 or k % g_bk:
+            g_bk = group_size
+        bk = g_bk
+    return bm, bk, bn, (-m) % bm
 
 
 def axllm_matmul(x: jax.Array, qt: QTensor, *, impl: str = "auto",
@@ -84,8 +110,7 @@ def axllm_matmul(x: jax.Array, qt: QTensor, *, impl: str = "auto",
     x2 = x.reshape(-1, kdim)
     m = x2.shape[0]
     per_group = qt.granularity == "per_group"
-    bm, bk, bn = _pick_blocks(m, kdim, n, qt.group_size, per_group)
-    pad_m = (-m) % bm
+    bm, bk, bn, pad_m = pick_blocks(m, kdim, n, qt.group_size, per_group)
     if pad_m:
         x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
     scale = _kernel_scale(qt)

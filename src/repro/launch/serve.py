@@ -7,6 +7,10 @@ through the continuous-batching engine.
       [--eos-id 0] [--long-prompt reject] [--stats]
 
 Flags of note:
+  --decode-chunk N  on-device decode steps per dispatch (default cfg value,
+                    8; 1 reproduces the per-token host round-trip loop)
+  --fuse-qkv        rewrite deployed params to fused wqkv/gate_up
+                    projections (one activation pass per block)
   --eos-id N        per-slot stop token (overrides cfg.eos_id; -1 disables)
   --long-prompt P   'truncate' (keep the prompt tail, default) or 'reject'
                     prompts longer than max_len-1
@@ -41,6 +45,13 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--no-quantize", action="store_true")
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--decode-chunk", type=int, default=None,
+                    help="on-device decode steps per dispatch (default: "
+                         "cfg.decode_chunk)")
+    ap.add_argument("--fuse-qkv", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="fused wqkv/gate_up projections (--no-fuse-qkv "
+                         "overrides a config that enables them)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop token id (-1: disable even if cfg sets one)")
     ap.add_argument("--long-prompt", choices=("truncate", "reject"),
@@ -74,7 +85,9 @@ def main(argv=None):
     eng = ServeEngine(cfg, params, n_slots=args.slots,
                       max_len=args.max_len,
                       quantize=not args.no_quantize,
-                      eos_id=eos_id, long_prompt=args.long_prompt)
+                      eos_id=eos_id, long_prompt=args.long_prompt,
+                      decode_chunk=args.decode_chunk,
+                      fuse_qkv=args.fuse_qkv)
     rng = np.random.default_rng(0)
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     prompts = [rng.integers(0, cfg.vocab_size,

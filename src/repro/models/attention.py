@@ -13,7 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.axllm_linear import linear
+from repro.core.axllm_linear import concat_weights, linear
 from repro.dist.sharding import shard
 from repro.kernels import ops
 from repro.models import layers as L
@@ -39,16 +39,39 @@ def init_attention(rng, cfg, dtype=jnp.float32):
     return p
 
 
+def fuse_attention_params(p):
+    """Replace wq/wk/wv with one fused wqkv (``[d, (H+2Hk)·hd]``): one
+    activation pass and one codebook residency per attention block instead
+    of three (deploy-time transform; works on dense or deploy-quantized
+    params, stacked-layer leading dims included). The unfused layout keeps
+    working — `_project_qkv` dispatches on key presence."""
+    if "wqkv" in p or "wq" not in p:
+        return p
+    p2 = {k: v for k, v in p.items()
+          if k not in ("wq", "wk", "wv", "wq_bias", "wk_bias", "wv_bias")}
+    p2["wqkv"] = concat_weights([p["wq"], p["wk"], p["wv"]])
+    if "wq_bias" in p:
+        p2["wqkv_bias"] = jnp.concatenate(
+            [p["wq_bias"], p["wk_bias"], p["wv_bias"]], axis=-1)
+    return p2
+
+
 def _project_qkv(p, x, cfg, impl):
     b, s, d = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q = linear(x, p["wq"], impl=impl)
-    k = linear(x, p["wk"], impl=impl)
-    v = linear(x, p["wv"], impl=impl)
-    if cfg.qkv_bias:
-        q = q + p["wq_bias"].astype(q.dtype)
-        k = k + p["wk_bias"].astype(k.dtype)
-        v = v + p["wv_bias"].astype(v.dtype)
+    if "wqkv" in p:  # fused path: one [d, (H+2Hk)·hd] AxLLM matmul
+        qkv = linear(x, p["wqkv"], impl=impl)
+        if "wqkv_bias" in p:
+            qkv = qkv + p["wqkv_bias"].astype(qkv.dtype)
+        q, k, v = jnp.split(qkv, (h * hd, (h + hk) * hd), axis=-1)
+    else:
+        q = linear(x, p["wq"], impl=impl)
+        k = linear(x, p["wk"], impl=impl)
+        v = linear(x, p["wv"], impl=impl)
+        if cfg.qkv_bias:
+            q = q + p["wq_bias"].astype(q.dtype)
+            k = k + p["wk_bias"].astype(k.dtype)
+            v = v + p["wv_bias"].astype(v.dtype)
     q = q.reshape(b, s, h, hd)
     k = k.reshape(b, s, hk, hd)
     v = v.reshape(b, s, hk, hd)

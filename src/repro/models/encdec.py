@@ -86,14 +86,45 @@ def encode(params, frames, cfg, impl: str = "auto"):
     return L.norm_fwd(params["enc_norm"], x, cfg.norm_eps)
 
 
+def fuse_cross_attention_params(p):
+    """Cross-attention fusion: only wk/wv share an input (the encoder
+    output), so they fuse into wkv; wq runs on the decoder stream and
+    stays separate."""
+    if "wkv" in p or "wk" not in p:
+        return p
+    from repro.core.axllm_linear import concat_weights
+    p2 = {k: v for k, v in p.items() if k not in ("wk", "wv")}
+    p2["wkv"] = concat_weights([p["wk"], p["wv"]])
+    return p2
+
+
+def fuse_params(params, cfg):
+    """Deploy-time fused-projection rewrite (cfg.fuse_qkv) over encoder
+    self-attention, decoder self/cross attention and both MLP stacks.
+    Apply AFTER deploy_quantize so QTensors concat exactly."""
+    enc = dict(params["enc_layers"])
+    enc["attn"] = A.fuse_attention_params(enc["attn"])
+    enc["mlp"] = L.fuse_mlp_params(enc["mlp"])
+    dec = dict(params["dec_layers"])
+    dec["self_attn"] = A.fuse_attention_params(dec["self_attn"])
+    dec["cross_attn"] = fuse_cross_attention_params(dec["cross_attn"])
+    dec["mlp"] = L.fuse_mlp_params(dec["mlp"])
+    return {**params, "enc_layers": enc, "dec_layers": dec}
+
+
 def _cross_kv(lp, enc_out, cfg):
     """Precompute cross-attention K/V from encoder output: [B, F, Hk, hd]."""
     from repro.core.axllm_linear import linear
     b, f, _ = enc_out.shape
     hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    k = linear(enc_out, lp["cross_attn"]["wk"]).reshape(b, f, hk, hd)
-    v = linear(enc_out, lp["cross_attn"]["wv"]).reshape(b, f, hk, hd)
-    return k, v
+    ca = lp["cross_attn"]
+    if "wkv" in ca:      # fused: one [d, 2·Hk·hd] pass over the encoder out
+        kv = linear(enc_out, ca["wkv"])
+        k, v = jnp.split(kv, 2, axis=-1)
+    else:
+        k = linear(enc_out, ca["wk"])
+        v = linear(enc_out, ca["wv"])
+    return k.reshape(b, f, hk, hd), v.reshape(b, f, hk, hd)
 
 
 def _dec_layer(lp, x, cfg, impl, enc_out=None, cross_kv=None,

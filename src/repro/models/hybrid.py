@@ -62,6 +62,17 @@ def init_params(rng, cfg):
     return p
 
 
+def fuse_params(params, cfg):
+    """Deploy-time fused-projection rewrite (cfg.fuse_qkv) of the shared
+    attention block (wqkv + gate_up). The Mamba backbone's projections are
+    already layout-fused at init (in_proj carries x/z/B/C/dt together).
+    Apply AFTER deploy_quantize so QTensors concat exactly."""
+    shared = dict(params["shared"])
+    shared["attn"] = A.fuse_attention_params(shared["attn"])
+    shared["mlp"] = L.fuse_mlp_params(shared["mlp"])
+    return {**params, "shared": shared}
+
+
 def _shared_fwd(sp, x, x0, cfg, impl, cache=None, pos=None, mode="train"):
     """Apply the shared attention block. x, x0: [B, S, d]."""
     from repro.core.axllm_linear import linear

@@ -89,8 +89,24 @@ def init_mlp(rng, cfg, d=None, d_ff=None, dtype=jnp.float32):
             "down": init_linear(ks[1], d_ff, d, dtype)}
 
 
+def fuse_mlp_params(p):
+    """Replace gate/up with one fused gate_up (``[d, 2·d_ff]``) — the MLP
+    analogue of the fused-QKV projection. GELU MLPs (no gate) are returned
+    unchanged; `mlp_fwd` dispatches on key presence."""
+    if "gate_up" in p or "gate" not in p:
+        return p
+    from repro.core.axllm_linear import concat_weights
+    p2 = {k: v for k, v in p.items() if k not in ("gate", "up")}
+    p2["gate_up"] = concat_weights([p["gate"], p["up"]])
+    return p2
+
+
 def mlp_fwd(p, x, cfg, impl: str = "auto"):
-    if "gate" in p:
+    if "gate_up" in p:   # fused path: one activation pass over [d, 2·d_ff]
+        gu = linear(x, p["gate_up"], impl=impl)
+        g, u = jnp.split(gu, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    elif "gate" in p:
         h = jax.nn.silu(linear(x, p["gate"], impl=impl)) \
             * linear(x, p["up"], impl=impl)
     else:

@@ -40,6 +40,9 @@ class ModelAPI:
     decode: Callable[..., Any]
     cache_spec: Any = None           # batch axis per init_cache leaf
     ragged_prefill: bool = False     # prefill(lengths=...) supported
+    # deploy-time fused-projection rewrite (wqkv / gate_up); apply AFTER
+    # deploy_quantize. None when the family has no fusable projections.
+    fuse_params: Optional[Callable[[Any], Any]] = None
 
 
 def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
@@ -58,6 +61,7 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
             cache_spec=mod.cache_spec(cfg),
             ragged_prefill=True,
+            fuse_params=lambda p: mod.fuse_params(p, cfg),
         )
     if fam == "ssm":
         mod = xlstm
@@ -73,6 +77,7 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
             cache_spec=mod.cache_spec(cfg),
             ragged_prefill=False,
+            fuse_params=lambda p: mod.fuse_params(p, cfg),
         )
     if fam == "hybrid":
         mod = hybrid
@@ -88,6 +93,7 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
             cache_spec=mod.cache_spec(cfg),
             ragged_prefill=False,
+            fuse_params=lambda p: mod.fuse_params(p, cfg),
         )
     if fam == "audio":
         mod = encdec
@@ -103,6 +109,7 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
             cache_spec=mod.cache_spec(cfg),
             ragged_prefill=True,
+            fuse_params=lambda p: mod.fuse_params(p, cfg),
         )
     raise ValueError(f"unknown family {fam!r}")
 

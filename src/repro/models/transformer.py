@@ -51,6 +51,24 @@ def init_params(rng, cfg):
     }
 
 
+def fuse_params(params, cfg):
+    """Deploy-time fused-projection rewrite (cfg.fuse_qkv): wq/wk/wv ->
+    wqkv and gate/up -> gate_up across the stacked layers. MoE routed
+    experts keep their einsum layout (only the shared/dense mlp_fwd paths
+    fuse); apply AFTER deploy_quantize so QTensors concat exactly."""
+    layers = dict(params["layers"])
+    layers["attn"] = A.fuse_attention_params(layers["attn"])
+    ffn = dict(layers["ffn"])
+    if cfg.family == "moe":
+        for key in ("shared", "dense"):
+            if key in ffn:
+                ffn[key] = L.fuse_mlp_params(ffn[key])
+    else:
+        ffn = L.fuse_mlp_params(ffn)
+    layers["ffn"] = ffn
+    return {**params, "layers": layers}
+
+
 def _ffn_fwd(p, x, cfg, impl):
     if cfg.family == "moe":
         return M.moe_ffn(p, x, cfg, impl=impl)

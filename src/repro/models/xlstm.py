@@ -74,6 +74,13 @@ def _mlstm_gates(p, xc, nh):
     return log_i, log_f
 
 
+def _mlstm_qk(p, xc):
+    """q/k projections over the conv stream; fused wqk when deployed so."""
+    if "wqk" in p:
+        return jnp.split(linear(xc, p["wqk"]), 2, axis=-1)
+    return linear(xc, p["wq"]), linear(xc, p["wk"])
+
+
 def mlstm_fwd(p, x, cfg, state=None, *, return_state: bool = False):
     """x: [B, S, d] -> [B, S, d] (chunkwise-parallel training form)."""
     b, s, d = x.shape
@@ -82,8 +89,9 @@ def mlstm_fwd(p, x, cfg, state=None, *, return_state: bool = False):
     xin, z = jnp.split(linear(xn, p["up"]), 2, axis=-1)
     conv_prev = state[0] if state is not None else None
     xc, new_conv = S._causal_conv(xin, p["conv_w"], p["conv_b"], conv_prev)
-    q = linear(xc, p["wq"]).reshape(b, s, nh, hd)
-    k = linear(xc, p["wk"]).reshape(b, s, nh, hd)
+    q, k = _mlstm_qk(p, xc)
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nh, hd)
     v = xin.reshape(b, s, nh, hd)
     log_i, log_f = _mlstm_gates(p, xc, nh)             # [B,S,H]
 
@@ -117,8 +125,9 @@ def mlstm_step(p, x, cfg, state):
     xn = L.norm_fwd(p["ln"], x, cfg.norm_eps)
     xin, z = jnp.split(linear(xn, p["up"]), 2, axis=-1)
     xc, new_conv = S._causal_conv(xin, p["conv_w"], p["conv_b"], conv_prev)
-    q = linear(xc, p["wq"]).reshape(b, nh, hd)
-    k = linear(xc, p["wk"]).reshape(b, nh, hd) / (hd ** 0.5)
+    q, k = _mlstm_qk(p, xc)
+    q = q.reshape(b, nh, hd)
+    k = k.reshape(b, nh, hd) / (hd ** 0.5)
     v = xin.reshape(b, nh, hd)
     log_i, log_f = _mlstm_gates(p, xc[:, 0], nh)       # [B,H]
 
@@ -212,7 +221,11 @@ def slstm_fwd(p, x, cfg, state=None, *, return_state: bool = False):
     y = L.norm_fwd(p["norm_h"], y, cfg.norm_eps)
     x = x + y
     hn = L.norm_fwd(p["ln_ff"], x, cfg.norm_eps)
-    ff = jax.nn.gelu(linear(hn, p["ff_gate"])) * linear(hn, p["ff_up"])
+    if "ff_gateup" in p:   # fused GeGLU: one [d, 2·dff] activation pass
+        fg, fu = jnp.split(linear(hn, p["ff_gateup"]), 2, axis=-1)
+        ff = jax.nn.gelu(fg) * fu
+    else:
+        ff = jax.nn.gelu(linear(hn, p["ff_gate"])) * linear(hn, p["ff_up"])
     x = x + linear(ff, p["ff_down"])
     if return_state:
         return x, new_state
@@ -256,6 +269,23 @@ def init_params(rng, cfg):
         "slstm": slstm,                                  # [n_super, ...]
         "final_norm": L.init_norm(cfg),
     }
+
+
+def fuse_params(params, cfg):
+    """Deploy-time fused-projection rewrite (cfg.fuse_qkv): mLSTM q/k run
+    over the same conv stream and fuse into wqk; the sLSTM GeGLU gate/up
+    fuse into ff_gateup. (The mLSTM up-projection is already fused at init:
+    one matmul emits x_in and the z-gate.) Apply AFTER deploy_quantize so
+    QTensors concat exactly."""
+    from repro.core.axllm_linear import concat_weights
+    mlstm = dict(params["mlstm"])
+    if "wqk" not in mlstm and "wq" in mlstm:    # idempotent, like wqkv
+        mlstm["wqk"] = concat_weights([mlstm.pop("wq"), mlstm.pop("wk")])
+    slstm = dict(params["slstm"])
+    if "ff_gateup" not in slstm and "ff_gate" in slstm:
+        slstm["ff_gateup"] = concat_weights(
+            [slstm.pop("ff_gate"), slstm.pop("ff_up")])
+    return {**params, "mlstm": mlstm, "slstm": slstm}
 
 
 def forward(params, tokens, cfg, impl: str = "auto"):

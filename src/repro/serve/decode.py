@@ -1,0 +1,87 @@
+"""On-device multi-token decode: the chunked scan that kills the per-token
+host round-trip.
+
+The per-token serving loop pays one dispatch, one logits device->host sync,
+one NumPy sample and one per-slot Python append for *every* generated token
+— the dominant tax on small-batch decode (kernel-launch/host-sync overhead,
+Donisch et al.). :func:`decode_steps` instead runs ``n`` decode steps inside
+one ``jax.lax.scan``: sampling (greedy argmax or categorical with a per-step
+split PRNG key) happens on device, per-slot stop conditions are tracked in a
+boolean mask, and the KV/recurrent cache stays resident in the carry (the
+engine donates it, so the buffer is reused in place). The host syncs once
+per chunk — a ``[n, B]`` token block plus its validity mask — to harvest
+finished slots and admit the next prefill wave.
+
+Stop-mask semantics (mirrors ``ServeEngine._stop_reason`` exactly):
+  - ``next == eos_id``          (EOS, when an eos id is configured)
+  - ``gen >= max_new``          (per-slot generation budget)
+  - ``cache["pos"] >= max_len`` (cache full: the next decode would write
+                                 out of bounds -> flagged truncated by the
+                                 engine at harvest)
+A stopped slot keeps riding through the scan (its row computes garbage that
+is masked out and overwritten by the next prefill wave into that slot);
+``valid`` is a per-slot prefix, so harvesting is "append tokens until the
+first False". Token-for-token equivalence with ``n`` sequential
+``api.decode`` calls is property-tested per family in
+tests/test_decode_steps.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class DecodeChunk(NamedTuple):
+    """Result of a chunked decode dispatch."""
+    tokens: jax.Array      # [n, B] int32 sampled tokens (garbage where ~valid)
+    valid: jax.Array       # [n, B] bool: slot was active when step ran
+    last: jax.Array        # [B] int32 last valid token per slot
+    cache: object          # advanced cache pytree (carry-resident)
+    rng: jax.Array         # PRNG key after n on-device splits
+    stop_mask: jax.Array   # [B] bool: slot finished inside this chunk
+    gen: jax.Array         # [B] int32 tokens generated so far (incl. prefill)
+
+
+def decode_steps(decode_fn, params, last, cache, rng, stop_mask, gen,
+                 max_new, *, n: int, vocab_size: int, max_len: int,
+                 eos_id: Optional[int] = None,
+                 greedy: bool = True) -> DecodeChunk:
+    """Run up to ``n`` decode steps of ``decode_fn`` entirely on device.
+
+    decode_fn:  ``(params, token [B], cache) -> (logits [B, V], cache)``
+                (a ``ModelAPI.decode``; the cache must carry a per-row
+                ``"pos"`` cursor, which all families do).
+    last:       [B] int32 last sampled token per slot.
+    stop_mask:  [B] bool; True rows are dead (empty or finished slots).
+    gen:        [B] int32 tokens generated so far (prefill token included).
+    max_new:    [B] int32 per-slot generation budget.
+    ``n``, ``vocab_size``, ``max_len``, ``eos_id`` and ``greedy`` are
+    trace-time constants (jit-static at the engine's call site).
+    """
+
+    def step(carry, _):
+        last, cache, rng, stop, gen = carry
+        logits, cache = decode_fn(params, last, cache)
+        logits = logits[..., :vocab_size]
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            nxt = jax.random.categorical(k, logits).astype(jnp.int32)
+        active = ~stop
+        nxt = jnp.where(active, nxt, last)
+        gen = gen + active.astype(jnp.int32)
+        hit = (gen >= max_new) | (cache["pos"] >= max_len)
+        if eos_id is not None:
+            hit = hit | (nxt == eos_id)
+        stop = stop | (active & hit)
+        return (nxt, cache, rng, stop, gen), (nxt, active)
+
+    carry = (jnp.asarray(last, jnp.int32), cache, rng,
+             jnp.asarray(stop_mask, bool), jnp.asarray(gen, jnp.int32))
+    (last, cache, rng, stop, gen), (toks, valid) = jax.lax.scan(
+        step, carry, None, length=n)
+    return DecodeChunk(toks, valid, last, cache, rng, stop, gen)

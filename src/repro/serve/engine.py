@@ -25,12 +25,31 @@ Scheduler contract
   steady mixed stream hits a handful of compiles
   (`stats.prefill_compiles`); recurrent families bucket wave size only —
   padded_len is the exact group length, i.e. one compile per distinct
-  prompt length. Decode is one jitted call per step over all slots with
-  the cache buffer donated.
+  prompt length. Decode is one jitted chunked-scan dispatch over all
+  slots with the cache buffer donated (see "Chunked decode" below).
+- **Chunked decode (the hot loop's hot loop).** `step()` dispatches ONE
+  on-device `lax.scan` of up to `decode_chunk` decode steps
+  (`repro.serve.decode.decode_steps`): sampling, PRNG splitting and the
+  per-slot stop masks all run on device, and the cache is donated into
+  the scan carry. The host syncs once per chunk ([n, B] tokens + validity
+  mask) instead of once per token. The chunk length is clamped to the
+  largest per-slot remaining budget (and to `run()`'s step budget), so a
+  wave that needs 3 tokens never pays for 8. `decode_chunk=1` reproduces
+  the per-token scheduler exactly (same tokens, same stats); larger
+  chunks trade admission latency (slots freed mid-chunk only refill at
+  the chunk boundary) for dispatch amortization.
+- **Fused projections.** `fuse_qkv=True` (engine arg or `cfg.fuse_qkv`)
+  rewrites the deployed params through `api.fuse_params` after
+  quantization: wq/wk/wv concatenate into one `[d, (H+2Hk)·hd]` wqkv
+  QTensor (`qconcat` — exact, scales travel with their columns), gate/up
+  into gate_up, so every attention/MLP block makes one pass over its
+  activations with one codebook residency.
 - **Stop conditions.** Per-slot: EOS token (`eos_id`, engine arg or
   `cfg.eos_id`), `max_new` tokens, or cache-full (`prompt + generated`
-  reaching `max_len` — flagged `truncated`). Finished slots free at the
-  end of the step and refill on the next.
+  reaching `max_len` — flagged `truncated`). The same three conditions
+  are evaluated on device inside the chunk (the mask freezes finished
+  rows) and re-derived on the host at harvest; finished slots free at
+  the chunk boundary and refill on the next step.
 - **Long prompts.** `long_prompt="truncate"` keeps the last
   `max_len - 1` prompt tokens (flagging `prompt_truncated`);
   `"reject"` raises at `submit()`. Nothing silently overflows the cache.
@@ -56,6 +75,7 @@ import jax.numpy as jnp
 from repro.core.axllm_linear import deploy_quantize
 from repro.core.quantization import QuantConfig
 from repro.models.model import ModelAPI, get_model
+from repro.serve.decode import decode_steps
 
 
 @dataclasses.dataclass
@@ -74,8 +94,9 @@ class EngineStats:
     admitted: int = 0
     finished: int = 0
     truncated: int = 0
-    steps: int = 0
-    decode_tokens: int = 0
+    steps: int = 0                    # device decode steps executed
+    decode_tokens: int = 0            # valid tokens harvested
+    decode_chunks: int = 0            # host round-trips (dispatches)
     prefill_waves: int = 0
     prefill_tokens: int = 0
     prefill_compiles: int = 0
@@ -96,6 +117,19 @@ class EngineStats:
         return d
 
 
+def _sample_tokens(logits, rng, *, greedy: bool, vocab_size: int):
+    """On-device sampling: greedy/sampled is jit-static, and the sampled
+    path threads a freshly split PRNG key per call instead of re-seeding
+    from host state. Returns (tokens [B] int32, advanced key)."""
+    if logits.ndim == 3:              # [B, S, V]: sample the last position
+        logits = logits[:, -1, :]
+    logits = logits[..., :vocab_size]
+    if greedy:
+        return jnp.argmax(logits, -1).astype(jnp.int32), rng
+    rng, k = jax.random.split(rng)
+    return jax.random.categorical(k, logits).astype(jnp.int32), rng
+
+
 def _pow2_bucket(n: int, lo: int, hi: int) -> int:
     """Smallest power of two >= n, floored at lo, capped at hi."""
     b = lo
@@ -109,7 +143,9 @@ class ServeEngine:
                  quantize: bool = False, quant_bits: int = 8,
                  impl: str = "auto", greedy: bool = True, seed: int = 0,
                  eos_id: Optional[int] = None,
-                 long_prompt: str = "truncate"):
+                 long_prompt: str = "truncate",
+                 decode_chunk: Optional[int] = None,
+                 fuse_qkv: Optional[bool] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "ServeEngine drives token-only prefill; encoder-decoder "
@@ -125,12 +161,22 @@ class ServeEngine:
             params = deploy_quantize(
                 params, QuantConfig(bits=quant_bits, mode="affine",
                                     granularity="per_channel"))
+        fuse = cfg.fuse_qkv if fuse_qkv is None else fuse_qkv
+        if fuse:
+            if self.api.fuse_params is None:
+                raise ValueError(f"family {cfg.family!r} has no fused-"
+                                 f"projection rewrite")
+            params = self.api.fuse_params(params)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.greedy = greedy
         self.eos_id = eos_id if eos_id is not None else cfg.eos_id
         self.long_prompt = long_prompt
+        dc = cfg.decode_chunk if decode_chunk is None else decode_chunk
+        if dc < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {dc}")
+        self.decode_chunk = dc
         self.rng = jax.random.PRNGKey(seed)
         self.cache = self.api.init_cache(n_slots, max_len)
         self._validate_cache_spec()
@@ -139,9 +185,11 @@ class ServeEngine:
         self.finished: List[Request] = []
         self._rid = 0
         self.stats = EngineStats()
-        self._decode = jax.jit(self.api.decode, donate_argnums=(2,))
+        self._chunk_fns = {}          # (n, greedy) -> jit scan-decode fn
         self._prefill_cache = {}      # (wave_bucket, padded_len) -> jit fn
         self._writer = jax.jit(self._write_wave, donate_argnums=(0,))
+        self._sampler = jax.jit(_sample_tokens,
+                                static_argnames=("greedy", "vocab_size"))
 
     def _validate_cache_spec(self):
         spec = self.api.cache_spec
@@ -263,14 +311,10 @@ class ServeEngine:
 
     # -- sampling --------------------------------------------------------------
     def _sample(self, logits):
-        logits = jnp.asarray(logits)
-        if logits.ndim == 3:              # [B, S, V]: sample the last position
-            logits = logits[:, -1, :]
-        logits = logits[..., : self.cfg.vocab_size]
-        if self.greedy:
-            return np.asarray(jnp.argmax(logits, -1))
-        self.rng, k = jax.random.split(self.rng)
-        return np.asarray(jax.random.categorical(k, logits))
+        toks, self.rng = self._sampler(jnp.asarray(logits), self.rng,
+                                       greedy=self.greedy,
+                                       vocab_size=self.cfg.vocab_size)
+        return np.asarray(toks)
 
     # -- stop conditions -------------------------------------------------------
     def _stop_reason(self, r: Request) -> Optional[str]:
@@ -292,7 +336,26 @@ class ServeEngine:
             self.stats.truncated += 1
 
     # -- decode ----------------------------------------------------------------
-    def step(self) -> bool:
+    def _get_chunk_fn(self, n: int):
+        """Jitted scan-decode for chunk length n (cache donated)."""
+        key = (n, self.greedy)
+        if key not in self._chunk_fns:
+            api, cfg = self.api, self.cfg
+            eos_id, max_len, greedy = self.eos_id, self.max_len, self.greedy
+
+            def fn(params, last, cache, rng, stop, gen, max_new):
+                return decode_steps(
+                    api.decode, params, last, cache, rng, stop, gen,
+                    max_new, n=n, vocab_size=cfg.vocab_size,
+                    max_len=max_len, eos_id=eos_id, greedy=greedy)
+
+            self._chunk_fns[key] = jax.jit(fn, donate_argnums=(2,))
+        return self._chunk_fns[key]
+
+    def step(self, max_n: Optional[int] = None) -> bool:
+        """Admit a prefill wave, then run ONE chunked decode dispatch of up
+        to min(decode_chunk, max_n, largest per-slot remaining budget)
+        on-device steps. Returns False when no work is left."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         while not active and self.queue:
@@ -303,28 +366,72 @@ class ServeEngine:
         if not active:
             return False
         last = np.zeros((self.n_slots,), np.int32)
-        for i in active:
-            last[i] = self.slots[i].tokens[-1]
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          self.cache)
-        nxt = self._sample(logits)
-        self.stats.steps += 1
-        self.stats.decode_tokens += len(active)
-        self.stats.occupancy_sum += len(active) / self.n_slots
+        gen = np.zeros((self.n_slots,), np.int32)
+        budget = np.zeros((self.n_slots,), np.int32)
+        stop = np.ones((self.n_slots,), bool)
+        remaining = 1
         for i in active:
             r = self.slots[i]
-            r.tokens.append(int(nxt[i]))
+            last[i] = r.tokens[-1]
+            gen[i] = len(r.tokens)
+            budget[i] = r.max_new
+            stop[i] = False
+            # slot i can emit at most this many more tokens (max_new and
+            # cache-capacity bounds; the scan wastes nothing past the wave)
+            rem = min(r.max_new - len(r.tokens),
+                      self.max_len - (len(r.prompt) + len(r.tokens) - 1))
+            remaining = max(remaining, rem)
+        n = max(1, min(self.decode_chunk, remaining,
+                       max_n if max_n is not None else remaining))
+        fn = self._get_chunk_fn(n)
+        out = fn(self.params, jnp.asarray(last), self.cache, self.rng,
+                 jnp.asarray(stop), jnp.asarray(gen), jnp.asarray(budget))
+        self.cache, self.rng = out.cache, out.rng
+        toks = np.asarray(out.tokens)
+        valid = np.asarray(out.valid)
+        self.stats.steps += n
+        self.stats.decode_chunks += 1
+        self.stats.decode_tokens += int(valid.sum())
+        self.stats.occupancy_sum += float(valid.sum()) / self.n_slots
+        for i in active:
+            r = self.slots[i]
+            for t in range(n):
+                if not valid[t, i]:
+                    break
+                r.tokens.append(int(toks[t, i]))
             if self._stop_reason(r) is not None:
                 self._finish(r)
                 self.slots[i] = None
         return True
 
     def run(self, max_steps: int = 10000):
+        """Serve until drained or `max_steps` device decode steps ran."""
         while (self.queue or any(s is not None for s in self.slots)) \
                 and max_steps > 0:
-            self.step()
-            max_steps -= 1
+            before = self.stats.steps
+            if not self.step(max_n=max_steps):
+                break
+            max_steps -= self.stats.steps - before
         return self.finished
+
+    def adopt_compiled(self, other: "ServeEngine"):
+        """Inherit another engine's jitted callables (benchmark warmup:
+        the timed engine starts compile-free). The adopted closures bake
+        the source engine's config and stop semantics, so mismatched
+        engines are rejected rather than silently decoding wrong tokens."""
+        mine = (self.cfg, self.eos_id, self.max_len, self.greedy,
+                self.n_slots)
+        theirs = (other.cfg, other.eos_id, other.max_len, other.greedy,
+                  other.n_slots)
+        if mine != theirs:
+            raise ValueError(
+                "adopt_compiled: engines differ in (cfg, eos_id, max_len, "
+                f"greedy, n_slots): {mine} vs {theirs}")
+        self._chunk_fns = other._chunk_fns
+        self._prefill_cache = other._prefill_cache
+        self._writer = other._writer
+        self._sampler = other._sampler
+        return self
 
     def generate(self, prompts, max_new: int = 32, max_steps: int = 10000,
                  return_requests: bool = False):

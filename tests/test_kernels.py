@@ -90,6 +90,64 @@ def test_lora_matmul_matches_ref():
 
 
 # ---------------------------------------------------------------------------
+# Decode-shape block table (pad decision lives in the table, not the call)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [8, 16, 24, 32, 40, 48, 56, 64, 72, 96, 120])
+def test_pick_blocks_no_pad_fast_path(m):
+    """Every multiple of 8 in the decode range dispatches without
+    re-padding M (the old table rounded up to the next power of two)."""
+    bm, bk, bn, pad_m = ops.pick_blocks(m, 512, 256)
+    assert pad_m == 0 and m % bm == 0
+
+
+def test_pick_blocks_widens_bn_for_skinny_m():
+    bm, _, bn, _ = ops.pick_blocks(8, 1024, 1024)
+    assert bm == 8 and bn == 512          # decode shape: wide N tiles
+    bm, _, bn, _ = ops.pick_blocks(256, 1024, 1024)
+    assert bm == 128 and bn == 256        # prefill shape: default tiling
+
+
+def test_pick_blocks_divisor_safe():
+    """Shapes the old min(512, k) rule would crash on (k % bk != 0)."""
+    for m, k, n in [(8, 384, 320), (16, 768, 640), (2, 96, 48)]:
+        bm, bk, bn, pad_m = ops.pick_blocks(m, k, n)
+        assert k % bk == 0 and n % bn == 0 and (m + pad_m) % bm == 0
+
+
+def test_pick_blocks_per_group_alignment():
+    bm, bk, bn, _ = ops.pick_blocks(8, 640, 256, group_size=128,
+                                    per_group=True)
+    assert bk % 128 == 0 and 640 % bk == 0
+
+
+@pytest.mark.parametrize("m", [8, 24, 48])
+def test_axllm_matmul_no_pad_shapes_interpret(m):
+    """The no-pad decode shapes produce correct results end to end."""
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (m, 512))
+    qt = quantize(_rand(rng, (512, 256)), QUANT_CONFIGS[0])
+    y_ref = ops.axllm_matmul(x, qt, impl="ref")
+    y_pal = ops.axllm_matmul(x, qt, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_axllm_matmul_wide_bn_skinny_m_interpret():
+    """Skinny m widens bn to 512 — exercise that tile shape end to end,
+    not just the table entry."""
+    rng = np.random.default_rng(8)
+    m, k, n = 8, 256, 512
+    assert ops.pick_blocks(m, k, n)[:3] == (8, 256, 512)
+    x = _rand(rng, (m, k))
+    qt = quantize(_rand(rng, (k, n)), QUANT_CONFIGS[0])
+    y_ref = ops.axllm_matmul(x, qt, impl="ref")
+    y_pal = ops.axllm_matmul(x, qt, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

@@ -212,18 +212,39 @@ def test_engine_on_hybrid_family_mixed_lengths():
 # ---------------------------------------------------------------------------
 
 def test_eos_early_exit_frees_slot(params):
-    base_eng = ServeEngine(CFG, params, n_slots=2, max_len=64)
+    # decode_chunk=1: admission happens every device step, so the EOS-freed
+    # slot demonstrably shortens the stream (chunked engines only admit at
+    # chunk boundaries — that latency/throughput trade is covered below)
+    base_eng = ServeEngine(CFG, params, n_slots=2, max_len=64,
+                           decode_chunk=1)
     prompts = [np.arange(8), np.arange(8) + 30, np.arange(8) + 77]
     base = base_eng.generate(prompts, max_new=8)
     eos = base[0][2]
     idx = base[0].index(eos)
-    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, eos_id=eos)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, eos_id=eos,
+                      decode_chunk=1)
     outs = eng.generate(prompts, max_new=8)
     assert outs[0] == base[0][: idx + 1]       # stops right after EOS
     assert len(outs) == 3 and eng.stats.finished == 3
     # the freed slot admits request 3 earlier, so the stream drains in
     # fewer decode steps than the no-EOS run
     assert eng.stats.steps < base_eng.stats.steps
+
+
+def test_eos_mid_chunk_freezes_slot(params):
+    """Chunked decode: EOS inside a chunk must freeze the slot's tokens on
+    device (validity mask) and produce the same result as per-token."""
+    prompts = [np.arange(8), np.arange(8) + 30, np.arange(8) + 77]
+    base = ServeEngine(CFG, params, n_slots=2, max_len=64,
+                       decode_chunk=1).generate(prompts, max_new=8)
+    eos = base[0][2]
+    for chunk in (4, 8):
+        eng = ServeEngine(CFG, params, n_slots=2, max_len=64, eos_id=eos,
+                          decode_chunk=chunk)
+        outs = eng.generate(prompts, max_new=8)
+        ref = ServeEngine(CFG, params, n_slots=2, max_len=64, eos_id=eos,
+                          decode_chunk=1).generate(prompts, max_new=8)
+        assert outs == ref
 
 
 def test_eos_on_first_prefill_token(params):
@@ -285,6 +306,43 @@ def test_step_driver_drains_prefill_only_requests(params):
     while eng.step():
         pass
     assert eng.stats.finished == 6 and not eng.queue
+
+
+# ---------------------------------------------------------------------------
+# Chunked decode
+# ---------------------------------------------------------------------------
+
+def test_chunked_engine_matches_per_token(params):
+    """decode_chunk amortizes dispatches without changing a single token."""
+    ref = ServeEngine(CFG, params, n_slots=2, max_len=64,
+                      decode_chunk=1).generate(MIXED, max_new=6)
+    for chunk in (3, 8):
+        eng = ServeEngine(CFG, params, n_slots=2, max_len=64,
+                          decode_chunk=chunk)
+        assert eng.generate(MIXED, max_new=6) == ref
+        # one dispatch per chunk, not per token
+        assert eng.stats.decode_chunks < eng.stats.steps
+        assert eng.stats.decode_tokens == eng.stats.steps * 2  # full slots
+
+
+def test_chunk_clamped_to_remaining_budget(params):
+    """A wave that needs 3 decode tokens must not pay for an 8-step scan:
+    stats.steps counts executed device steps, so occupancy stays exact."""
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, decode_chunk=8)
+    eng.generate([np.arange(8), np.arange(8) + 9], max_new=4)
+    assert eng.stats.steps == 3                # 1 prefill + 3 decode tokens
+    assert eng.stats.decode_chunks == 1
+    assert eng.stats.mean_occupancy == 1.0
+
+
+def test_run_budget_counts_device_steps(params):
+    """run(max_steps) bounds device decode steps, not dispatches."""
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, decode_chunk=8)
+    ids = [eng.submit(np.arange(8), max_new=20) for _ in range(2)]
+    eng.run(max_steps=5)
+    assert eng.stats.steps == 5
+    assert all(len(eng.slots[i].tokens) == 6 for i in range(2))
+    assert ids == [0, 1]
 
 
 # ---------------------------------------------------------------------------
