@@ -11,6 +11,12 @@ the decode hot path:
     on-device lax.scan dispatch per 8 tokens) — ``decode_chunk_speedup``
     records tok/s(chunk8) / tok/s(chunk1) per mode
   - fused wqkv/gate_up projections on top of int8 + chunked decode
+  - multi-LoRA serving: the same int8/chunk8 engine with an
+    AdapterRegistry holding 2 synthetic adapters, requests cycling
+    base/adapter0/adapter1 — the ``multi_lora`` row records the tok/s
+    overhead of the gathered delta pipeline vs the base-only engine
+    (paper's dual-pipeline claim: the base path is untouched, so the
+    overhead is just the low-rank einsums + gather)
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
 
@@ -30,13 +36,14 @@ SMOKE = dict(n_slots=2, max_len=64, requests=6, max_new=16,
 FULL = dict(n_slots=4, max_len=256, requests=32, max_new=32,
             prompt_lens=(8, 12, 31, 64, 96))
 
-# (label, quantize, decode_chunk, fuse_qkv)
+# (label, quantize, decode_chunk, fuse_qkv, n_loras)
 MODES = [
-    ("bf16/chunk1", False, 1, False),
-    ("bf16/chunk8", False, 8, False),
-    ("axllm-int8/chunk1", True, 1, False),
-    ("axllm-int8/chunk8", True, 8, False),
-    ("axllm-int8/chunk8/fused", True, 8, True),
+    ("bf16/chunk1", False, 1, False, 0),
+    ("bf16/chunk8", False, 8, False, 0),
+    ("axllm-int8/chunk1", True, 1, False, 0),
+    ("axllm-int8/chunk8", True, 8, False, 0),
+    ("axllm-int8/chunk8/fused", True, 8, True, 0),
+    ("axllm-int8/chunk8/multi-lora", True, 8, False, 2),
 ]
 
 
@@ -51,9 +58,16 @@ def _build():
 
 
 def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
-           fuse_qkv: bool):
+           fuse_qkv: bool, lora: int = 0):
     import numpy as np
     from repro.serve.engine import ServeEngine
+
+    if lora:
+        from repro.launch.serve import make_synthetic_adapters
+        registry, names = make_synthetic_adapters(cfg, n=lora)
+        cycle = [None] + names
+    else:
+        registry, cycle = None, [None]
 
     def submit_stream(eng):
         rng = np.random.default_rng(0)
@@ -61,12 +75,14 @@ def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
         for i in range(p["requests"]):
             eng.submit(rng.integers(0, cfg.vocab_size,
                                     size=lens[i % len(lens)])
-                       .astype(np.int32), max_new=p["max_new"])
+                       .astype(np.int32), max_new=p["max_new"],
+                       adapter=cycle[i % len(cycle)])
 
     def make():
         return ServeEngine(cfg, params, n_slots=p["n_slots"],
                            max_len=p["max_len"], quantize=quantize,
-                           decode_chunk=decode_chunk, fuse_qkv=fuse_qkv)
+                           decode_chunk=decode_chunk, fuse_qkv=fuse_qkv,
+                           adapters=registry)
 
     # untimed warmup pass: the timed engine inherits the jitted
     # prefill-bucket/chunk-decode/writer callables, so the trajectory below
@@ -109,12 +125,24 @@ def bench(smoke: bool = True) -> dict:
         "modes": {},
         "decode_chunk_speedup": {},
     }
-    for label, quant, chunk, fuse in MODES:
-        report["modes"][label] = _serve(cfg, params, p, quant, chunk, fuse)
+    for label, quant, chunk, fuse, lora in MODES:
+        report["modes"][label] = _serve(cfg, params, p, quant, chunk, fuse,
+                                        lora=lora)
     for base in ("bf16", "axllm-int8"):
         t1 = report["modes"][f"{base}/chunk1"]["tokens_per_sec"]
         t8 = report["modes"][f"{base}/chunk8"]["tokens_per_sec"]
         report["decode_chunk_speedup"][base] = round(t8 / t1, 2) if t1 else 0.0
+    # dual-pipeline overhead: base-only vs mixed base+2-adapters stream on
+    # the same int8/chunk8 engine (>= 1.0 means LoRA serving costs that
+    # factor in tok/s; the acceptance bar is <= 1.3x)
+    t_base = report["modes"]["axllm-int8/chunk8"]["tokens_per_sec"]
+    t_lora = report["modes"]["axllm-int8/chunk8/multi-lora"]["tokens_per_sec"]
+    report["multi_lora"] = {
+        "n_adapters": 2,
+        "tokens_per_sec": t_lora,
+        "base_tokens_per_sec": t_base,
+        "overhead_vs_base": round(t_base / t_lora, 3) if t_lora else 0.0,
+    }
     return report
 
 
@@ -129,6 +157,9 @@ def run():
                      f"occ={m['stats']['mean_occupancy']:.2f}"))
     for base, s in rep["decode_chunk_speedup"].items():
         rows.append((f"serve/{base}/chunk_speedup", 0.0, f"{s}x"))
+    ml = rep["multi_lora"]
+    rows.append(("serve/multi_lora/overhead", 0.0,
+                 f"{ml['overhead_vs_base']}x vs base-only"))
     return rows
 
 
@@ -150,6 +181,9 @@ def main(argv=None):
               f"{m['stats']['decode_chunks']} dispatches)")
     for base, s in rep["decode_chunk_speedup"].items():
         print(f"decode_chunk=8 vs 1 [{base}]: {s}x tok/s")
+    ml = rep["multi_lora"]
+    print(f"multi-LoRA (2 adapters) overhead vs base-only: "
+          f"{ml['overhead_vs_base']}x tok/s")
     print(f"wrote {args.out}")
 
 

@@ -1,16 +1,24 @@
-"""LoRA fine-tuning example (paper §III + Fig. 5).
+"""LoRA fine-tune → register → serve walkthrough (paper §III + Fig. 5).
 
 Takes a base dense LM, freezes it, trains rank-16 adapters on the attention
 projections against a shifted data distribution, then:
   1. verifies merged-adapter equivalence,
-  2. serves base + adapters through the quantized combined path, and
+  2. checks the quantized-base combined path on one layer,
   3. measures the paper's Fig. 5 statistic on the REAL trained A matrices:
      the fraction of A-row values already present in the corresponding W row
      (paper: ~90%), and the adapter-matrix speedup from combined reuse
-     (paper: ~1.8x).
+     (paper: ~1.8x), and
+  4. registers the trained adapters in an AdapterRegistry and serves a
+     mixed base + LoRA request stream through the continuous-batching
+     ServeEngine on the AxLLM int8 path — the dual-pipeline serving
+     story: frozen quantized base, bf16 low-rank deltas, no parameter
+     rewrites.
 
 Run:  PYTHONPATH=src python examples/lora_finetune.py
+      (SMOKE=1 trims the training loop for CI)
 """
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +79,8 @@ def main():
         ads, opt_state, _ = adamw.update(ads, g, opt_state, ocfg, 1.0)
         return ads, opt_state, loss
 
-    for s in range(60):
+    n_steps = 8 if os.environ.get("SMOKE") else 60
+    for s in range(n_steps):
         b = jax.tree_util.tree_map(jnp.asarray, ds.batch_at(s))
         adapters, opt, loss = step(adapters, opt, b, s)
         if s % 20 == 0:
@@ -101,6 +110,36 @@ def main():
     print(f"A-row overlap with W rows: {overlap:.3f}  (paper: ~0.90)")
     print(f"adapter-matrix speedup via combined [W|A] reuse: "
           f"{sim['adapter_speedup']:.2f}x  (paper: ~1.8x)")
+
+    # 4) register the trained adapters and serve a mixed stream through the
+    # continuous-batching engine (train -> register -> serve). The trained
+    # per-target layout {"lora_a": [n_layers, d, r], "lora_b": [n_layers,
+    # r, n_out]} is exactly what the registry stacks.
+    from repro.serve.adapters import AdapterRegistry
+    from repro.serve.engine import ServeEngine
+
+    reg = AdapterRegistry(cfg, lcfg, max_loras=2)
+    reg.add("tuned", adapters)
+    eng = ServeEngine(cfg, base, n_slots=2, max_len=64, quantize=True,
+                      adapters=reg)
+    prompts = [np.arange(8), np.arange(8) + 40, np.arange(8) + 90,
+               np.arange(8) + 130]
+    names = [None, "tuned", None, "tuned"]
+    outs = eng.generate(prompts, max_new=12, adapters=names)
+    print(f"served {len(outs)} requests (base + LoRA mixed), "
+          f"{eng.stats.lora_requests} on the adapter, "
+          f"occupancy {eng.stats.mean_occupancy:.2f}")
+
+    # the engine's LoRA rows match serving the merged weights directly
+    merged_eng = ServeEngine(cfg, apply_adapters(base, adapters), n_slots=2,
+                             max_len=64, quantize=True)
+    merged = merged_eng.generate([p for p, n in zip(prompts, names) if n],
+                                 max_new=12)
+    served = [o for o, n in zip(outs, names) if n]
+    agree = np.mean([a == b for A, B in zip(served, merged)
+                     for a, b in zip(A, B)])
+    print(f"engine LoRA rows vs merged-weights engine: {agree:.2%} "
+          f"greedy-token agreement (runtime delta vs merged; int8 base)")
 
 
 if __name__ == "__main__":

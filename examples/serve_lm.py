@@ -3,7 +3,12 @@ exists (otherwise a fresh model), deploys it through the AxLLM int8 path,
 and runs a stream of batched requests through the continuous-batching engine
 — comparing tokens/step and agreement between the bf16 and AxLLM paths.
 
+Uses the current ServeEngine contract: chunked on-device decode
+(`decode_chunk` scan steps per dispatch) and the scheduler stats surface
+(`eng.stats`). See docs/ARCHITECTURE.md for the full contract.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py
+      (SMOKE=1 trims the request budget for CI)
 """
 
 import os
@@ -39,17 +44,21 @@ def main():
                          b"return self", b"for i in ra", b"print(f\"st")]
     prompts = [p[:11] for p in prompts]
 
+    max_new = 8 if os.environ.get("SMOKE") else 24
     results = {}
     for label, quant in (("bf16", False), ("axllm-int8", True)):
         eng = ServeEngine(cfg, params, n_slots=4, max_len=128,
                           quantize=quant)
         t0 = time.time()
-        outs = eng.generate(prompts, max_new=24)
+        outs = eng.generate(prompts, max_new=max_new)
         dt = time.time() - t0
         results[label] = outs
         toks = sum(len(o) for o in outs)
+        st = eng.stats
         print(f"[{label}] {toks} tokens in {dt:.2f}s "
-              f"({toks/dt:.1f} tok/s on CPU fallback)")
+              f"({toks/dt:.1f} tok/s on CPU fallback; "
+              f"{st.decode_chunks} decode dispatches for {st.steps} device "
+              f"steps, occupancy {st.mean_occupancy:.2f})")
 
     agree = np.mean([a == b
                      for A, B in zip(results["bf16"], results["axllm-int8"])

@@ -83,6 +83,42 @@ def lora_linear(x: Array, w, adapter: Optional[dict], cfg: LoRAConfig, *,
     return y if out_dtype is None else y.astype(out_dtype)
 
 
+def lora_delta_batched(x: Array, adapter: dict, idx: Array,
+                       scaling: float) -> Array:
+    """Gathered multi-adapter LoRA delta — the serve-path second pipeline.
+
+    Computes ``scaling * (x @ A[idx]) @ B[idx]`` with a per-batch-row
+    adapter selection, so one dispatch serves a mixed batch of base-only
+    rows and rows running N different adapters (paper §III dual-pipeline:
+    the base weight stays untouched — quantized or dense — while the
+    low-rank delta rides alongside in bf16/fp32).
+
+    x:        ``[B, ..., n_in]`` activations (any number of middle dims).
+    adapter:  ``{"lora_a": [L, n_in, r], "lora_b": [L, r, n_out]}`` —
+              ``L`` stacked adapters (an :class:`~repro.serve.adapters.
+              AdapterRegistry` target entry for one layer).
+    idx:      ``[B]`` int32 adapter row per batch element; ``-1`` means
+              base-only (that row's delta is masked to exact zeros).
+    scaling:  the LoRA ``alpha / rank`` factor.
+
+    Returns a float32 ``[B, ..., n_out]`` delta (cast at the call site).
+    Row ``i`` of the result is bit-identical to running the unbatched
+    two-matmul LoRA path on ``x[i]`` with adapter ``idx[i]`` alone: the
+    gather feeds the very same A/B operands into a per-row-independent
+    contraction (property-tested in tests/test_adapters.py).
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    safe = jnp.maximum(idx, 0)                      # -1 rows gather row 0 ...
+    a = jnp.take(adapter["lora_a"], safe, axis=0).astype(jnp.float32)
+    b = jnp.take(adapter["lora_b"], safe, axis=0).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xa = jnp.einsum("b...k,bkr->b...r", xf, a)      # [B, ..., r]
+    delta = jnp.einsum("b...r,brn->b...n", xa, b)   # [B, ..., n_out]
+    mask = (idx >= 0).astype(jnp.float32)           # ... and are masked here
+    mask = mask.reshape(idx.shape[0], *([1] * (x.ndim - 1)))
+    return scaling * delta * mask
+
+
 def merge_lora(w: Array, adapter: dict, cfg: LoRAConfig) -> Array:
     """Fold the adapter into a dense weight (for equivalence tests)."""
     return w + cfg.scaling * (adapter["lora_a"] @ adapter["lora_b"]).astype(

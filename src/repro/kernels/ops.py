@@ -81,6 +81,11 @@ def pick_blocks(m: int, k: int, n: int, group_size: int = 128,
     the 256 default) to keep the MXU fed from the N grid dimension — the
     per-tile VMEM footprint stays far under budget because the x tile
     shrinks with bm.
+
+    >>> pick_blocks(16, 128, 256)       # skinny decode shape: no pad
+    (16, 128, 256, 0)
+    >>> pick_blocks(9, 128, 256)        # odd m falls back to bm=8 + pad
+    (8, 128, 256, 7)
     """
     if m >= 128:
         bm = 128

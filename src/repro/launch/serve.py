@@ -4,7 +4,7 @@ through the continuous-batching engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch repro-100m \
       --requests 16 --max-new 32 [--no-quantize] [--kv-int8] \
-      [--eos-id 0] [--long-prompt reject] [--stats]
+      [--eos-id 0] [--long-prompt reject] [--lora 2] [--stats]
 
 Flags of note:
   --decode-chunk N  on-device decode steps per dispatch (default cfg value,
@@ -16,8 +16,15 @@ Flags of note:
                     prompts longer than max_len-1
   --prompt-lens L   comma list of prompt lengths cycled over the stream
                     (mixed lengths exercise the ragged prefill waves)
+  --lora N          register N synthetic LoRA adapters and cycle requests
+                    over base + adapters (the dual-pipeline serving path;
+                    see also --lora-rank/--lora-alpha/--lora-targets/
+                    --max-loras)
   --stats           print the engine's scheduler stats as JSON
                     (admitted/finished/truncated, tokens/step, occupancy)
+
+The full flags table is documented in docs/ARCHITECTURE.md (CI's docs job
+fails when this parser and that table drift apart).
 """
 
 from __future__ import annotations
@@ -33,6 +40,43 @@ from repro.configs import apply_overrides, get_config
 from repro.models.model import get_model
 from repro.serve.engine import ServeEngine
 from repro.train import checkpoint as C
+
+
+def make_synthetic_adapters(cfg, n: int, rank: int = 8, alpha: float = 16.0,
+                            targets=("wq", "wv"), max_loras=None, seed=0):
+    """Build an AdapterRegistry with ``n`` random (non-zero-B) adapters.
+
+    Stands in for trained adapters in the launcher/benchmark: each
+    adapter's B matrices are small random values so the delta pipeline
+    measurably changes outputs without wrecking the base distribution.
+    Returns (registry, [adapter names]).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.axllm_linear import LoRAConfig
+    from repro.serve.adapters import AdapterRegistry, target_dims
+
+    lcfg = LoRAConfig(rank=rank, alpha=alpha, targets=tuple(targets))
+    reg = AdapterRegistry(cfg, lcfg,
+                          max_loras=max_loras or max(4, n))
+    rng = np.random.default_rng(seed)
+    names = []
+    for i in range(n):
+        ad = {}
+        for t in lcfg.targets:
+            n_in, n_out = target_dims(cfg, t)
+            ad[t] = {
+                "lora_a": jnp.asarray(
+                    rng.normal(size=(cfg.n_layers, n_in, rank))
+                    / np.sqrt(rank), jnp.float32),
+                "lora_b": jnp.asarray(
+                    rng.normal(size=(cfg.n_layers, rank, n_out)) * 0.05,
+                    jnp.float32),
+            }
+        name = f"adapter{i}"
+        reg.add(name, ad)
+        names.append(name)
+    return reg, names
 
 
 def main(argv=None):
@@ -58,6 +102,18 @@ def main(argv=None):
                     default="truncate")
     ap.add_argument("--prompt-lens", default="8,12,31",
                     help="comma list of prompt lengths cycled over requests")
+    ap.add_argument("--lora", type=int, default=0,
+                    help="register N synthetic LoRA adapters and cycle "
+                         "requests over base + adapters (0: base only)")
+    ap.add_argument("--lora-rank", type=int, default=8,
+                    help="adapter rank (all registered adapters share it)")
+    ap.add_argument("--lora-alpha", type=float, default=16.0,
+                    help="adapter alpha (scaling = alpha / rank)")
+    ap.add_argument("--lora-targets", default="wq,wv",
+                    help="comma list of attention projections the adapters "
+                         "target (subset of wq,wk,wv,wo)")
+    ap.add_argument("--max-loras", type=int, default=None,
+                    help="registry capacity (default: max(4, --lora))")
     ap.add_argument("--stats", action="store_true",
                     help="print scheduler stats JSON after the run")
     ap.add_argument("--set", action="append", default=[])
@@ -82,28 +138,47 @@ def main(argv=None):
     if eos_id is not None and eos_id < 0:
         eos_id = None
         cfg = apply_overrides(cfg, {"eos_id": "none"})
+
+    registry = None
+    adapter_cycle = [None]
+    if args.lora > 0:
+        registry, names = make_synthetic_adapters(
+            cfg, n=args.lora, rank=args.lora_rank, alpha=args.lora_alpha,
+            targets=tuple(t for t in args.lora_targets.split(",") if t),
+            max_loras=args.max_loras)
+        adapter_cycle = [None] + names
+        print(f"registered {len(names)} LoRA adapters "
+              f"(rank {args.lora_rank}, targets {args.lora_targets}); "
+              f"requests cycle over base + {names}")
+
     eng = ServeEngine(cfg, params, n_slots=args.slots,
                       max_len=args.max_len,
                       quantize=not args.no_quantize,
                       eos_id=eos_id, long_prompt=args.long_prompt,
                       decode_chunk=args.decode_chunk,
-                      fuse_qkv=args.fuse_qkv)
+                      fuse_qkv=args.fuse_qkv, adapters=registry)
     rng = np.random.default_rng(0)
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     prompts = [rng.integers(0, cfg.vocab_size,
                             size=lens[i % len(lens)]).astype(np.int32)
                for i in range(args.requests)]
+    adapters = [adapter_cycle[i % len(adapter_cycle)]
+                for i in range(args.requests)]
     t0 = time.time()
-    reqs = eng.generate(prompts, max_new=args.max_new, return_requests=True)
+    reqs = eng.generate(prompts, max_new=args.max_new, return_requests=True,
+                        adapters=adapters)
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in reqs)
     mode = "bf16" if args.no_quantize else f"axllm-int{cfg.quant_bits}"
+    lora_tag = f", {eng.stats.lora_requests} LoRA requests" if args.lora \
+        else ""
     print(f"[{mode}] {len(reqs)} requests, {toks} tokens, "
           f"{toks/dt:.1f} tok/s, occupancy "
-          f"{eng.stats.mean_occupancy:.2f} (host fallback path)")
+          f"{eng.stats.mean_occupancy:.2f}{lora_tag} (host fallback path)")
     for r in reqs[:3]:
         tag = " [truncated]" if r.truncated else ""
-        print(f"  -> {r.tokens[:12]}{tag}")
+        ad = f" [{r.adapter}]" if r.adapter else ""
+        print(f"  -> {r.tokens[:12]}{tag}{ad}")
     if args.stats:
         print(json.dumps(eng.stats.as_dict(), indent=2, sort_keys=True))
 

@@ -13,7 +13,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.axllm_linear import concat_weights, linear
+from repro.core.axllm_linear import concat_weights, linear, \
+    lora_delta_batched
 from repro.dist.sharding import shard
 from repro.kernels import ops
 from repro.models import layers as L
@@ -56,7 +57,19 @@ def fuse_attention_params(p):
     return p2
 
 
-def _project_qkv(p, x, cfg, impl):
+def _project_qkv(p, x, cfg, impl, adapters=None, adapter_idx=None,
+                 lora_scaling: float = 1.0):
+    """Project x -> (q, k, v) heads; fused wqkv or separate wq/wk/wv.
+
+    ``adapters``/``adapter_idx`` enable the serve-path LoRA pipeline: the
+    base matmul (dense or quantized, fused included) is untouched and each
+    targeted projection adds its gathered per-row low-rank delta. On the
+    fused path the wqkv output is split into its q/k/v column blocks
+    first and each block receives its target's delta — elementwise
+    identical to scattering a concatenated [dq ‖ dk ‖ dv] delta into the
+    fused output's columns, so fused and unfused LoRA decode stay
+    token-for-token equal (tests/test_adapters.py).
+    """
     b, s, d = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     if "wqkv" in p:  # fused path: one [d, (H+2Hk)·hd] AxLLM matmul
@@ -72,6 +85,16 @@ def _project_qkv(p, x, cfg, impl):
             q = q + p["wq_bias"].astype(q.dtype)
             k = k + p["wk_bias"].astype(k.dtype)
             v = v + p["wv_bias"].astype(v.dtype)
+    if adapters is not None:
+        if "wq" in adapters:
+            q = q + lora_delta_batched(x, adapters["wq"], adapter_idx,
+                                       lora_scaling).astype(q.dtype)
+        if "wk" in adapters:
+            k = k + lora_delta_batched(x, adapters["wk"], adapter_idx,
+                                       lora_scaling).astype(k.dtype)
+        if "wv" in adapters:
+            v = v + lora_delta_batched(x, adapters["wv"], adapter_idx,
+                                       lora_scaling).astype(v.dtype)
     q = q.reshape(b, s, h, hd)
     k = k.reshape(b, s, hk, hd)
     v = v.reshape(b, s, hk, hd)
@@ -135,15 +158,31 @@ def attention_fwd(p, x, cfg, *, positions=None, impl: str = "auto"):
     return linear(out, p["wo"], impl=impl)
 
 
-def attention_prefill(p, x, cfg, layer_cache, *, impl: str = "auto"):
+def _wo_project(p, out, impl, adapters, adapter_idx, lora_scaling):
+    """Output projection with an optional gathered LoRA delta on wo."""
+    y = linear(out, p["wo"], impl=impl)
+    if adapters is not None and "wo" in adapters:
+        y = y + lora_delta_batched(out, adapters["wo"], adapter_idx,
+                                   lora_scaling).astype(y.dtype)
+    return y
+
+
+def attention_prefill(p, x, cfg, layer_cache, *, impl: str = "auto",
+                      adapters=None, adapter_idx=None,
+                      lora_scaling: float = 1.0):
     """Full-seq attention that also fills this layer's cache slice.
 
     layer_cache: {"k": [B, S_max, Hk, hd], ...} (no leading L — the scan
     slices it). Returns (out, updated_layer_cache).
+
+    ``adapters``: this layer's stacked-adapter slice ``{target:
+    {"lora_a": [max_loras, n_in, r], "lora_b": [max_loras, r, n_out]}}``;
+    ``adapter_idx``: [B] int32 per-row adapter selection (-1 = base).
     """
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    q, k, v = _project_qkv(p, x, cfg, impl)
+    q, k, v = _project_qkv(p, x, cfg, impl, adapters, adapter_idx,
+                           lora_scaling)
     q = L.rope(q, positions, cfg.rope_theta)
     k = L.rope(k, positions, cfg.rope_theta)
     out = ops.flash_attention(q, k, v, causal=True, impl=impl)
@@ -165,7 +204,8 @@ def attention_prefill(p, x, cfg, layer_cache, *, impl: str = "auto"):
             layer_cache["k"], k.astype(layer_cache["k"].dtype), 0, axis=1)
         new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
             layer_cache["v"], v.astype(layer_cache["v"].dtype), 0, axis=1)
-    return linear(out, p["wo"], impl=impl), new_cache
+    return _wo_project(p, out, impl, adapters, adapter_idx,
+                       lora_scaling), new_cache
 
 
 def _seq_shard_ctx(cfg, batch: int, cache_len: int):
@@ -190,11 +230,18 @@ def _seq_shard_ctx(cfg, batch: int, cache_len: int):
     return mesh, seq_axes, batch_axes
 
 
-def attention_decode(p, x, cfg, layer_cache, pos, *, impl: str = "auto"):
-    """One-token decode. x: [B, 1, d]; pos: [B] current positions."""
+def attention_decode(p, x, cfg, layer_cache, pos, *, impl: str = "auto",
+                     adapters=None, adapter_idx=None,
+                     lora_scaling: float = 1.0):
+    """One-token decode. x: [B, 1, d]; pos: [B] current positions.
+
+    ``adapters``/``adapter_idx`` as in :func:`attention_prefill` — the
+    LoRA delta pipeline rides through the same cached-decode step.
+    """
     b = x.shape[0]
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q, k, v = _project_qkv(p, x, cfg, impl)          # [B, 1, ...]
+    q, k, v = _project_qkv(p, x, cfg, impl, adapters, adapter_idx,
+                           lora_scaling)             # [B, 1, ...]
     q = L.rope(q, pos[:, None], cfg.rope_theta)
     k = L.rope(k, pos[:, None], cfg.rope_theta)
 
@@ -220,7 +267,8 @@ def attention_decode(p, x, cfg, layer_cache, pos, *, impl: str = "auto"):
                 q[:, 0], layer_cache["k"], layer_cache["v"],
                 k[:, 0], v[:, 0], pos, pos + 1, mesh, seq_axes, batch_axes)
         out = out.reshape(b, 1, h * hd)
-        return linear(out, p["wo"], impl=impl), cache
+        return _wo_project(p, out, impl, adapters, adapter_idx,
+                           lora_scaling), cache
 
     cache = dict(layer_cache)
     bidx = jnp.arange(b)
@@ -242,4 +290,5 @@ def attention_decode(p, x, cfg, layer_cache, pos, *, impl: str = "auto"):
         out = ops.decode_attention(q[:, 0], cache["k"], cache["v"], pos + 1,
                                    impl=impl)
     out = out.reshape(b, 1, h * hd)
-    return linear(out, p["wo"], impl=impl), cache
+    return _wo_project(p, out, impl, adapters, adapter_idx,
+                       lora_scaling), cache

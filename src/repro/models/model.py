@@ -43,6 +43,11 @@ class ModelAPI:
     # deploy-time fused-projection rewrite (wqkv / gate_up); apply AFTER
     # deploy_quantize. None when the family has no fusable projections.
     fuse_params: Optional[Callable[[Any], Any]] = None
+    # True when prefill/decode accept the multi-LoRA delta-pipeline kwargs
+    # (adapters=, adapter_idx=, lora_scaling=). Recurrent families fold
+    # positions into state through paths with no per-slot projection hook,
+    # so they stay False and the serve engine rejects adapter registries.
+    supports_lora: bool = False
 
 
 def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
@@ -56,12 +61,19 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             forward=lambda p, b: mod.forward(p, b["tokens"], cfg, impl=impl),
             init_cache=lambda batch, max_len: mod.init_cache(
                 cfg, batch, max_len),
-            prefill=lambda p, b, c, lengths=None: mod.prefill(
-                p, b["tokens"], cfg, c, impl=impl, lengths=lengths),
-            decode=lambda p, t, c: mod.decode_step(p, t, cfg, c, impl=impl),
+            prefill=lambda p, b, c, lengths=None, adapters=None,
+            adapter_idx=None, lora_scaling=1.0: mod.prefill(
+                p, b["tokens"], cfg, c, impl=impl, lengths=lengths,
+                adapters=adapters, adapter_idx=adapter_idx,
+                lora_scaling=lora_scaling),
+            decode=lambda p, t, c, adapters=None, adapter_idx=None,
+            lora_scaling=1.0: mod.decode_step(
+                p, t, cfg, c, impl=impl, adapters=adapters,
+                adapter_idx=adapter_idx, lora_scaling=lora_scaling),
             cache_spec=mod.cache_spec(cfg),
             ragged_prefill=True,
             fuse_params=lambda p: mod.fuse_params(p, cfg),
+            supports_lora=True,
         )
     if fam == "ssm":
         mod = xlstm

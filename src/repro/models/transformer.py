@@ -129,7 +129,8 @@ def _cache_xs(cache):
     return {k: v for k, v in cache.items() if k != "pos"}
 
 
-def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None):
+def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None,
+            adapters=None, adapter_idx=None, lora_scaling: float = 1.0):
     """tokens: [B, S] -> (last-position logits [B, V], filled cache).
 
     With `lengths` ([B] int32, ragged right-padded prompts), logits are
@@ -138,21 +139,34 @@ def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None):
     padding (pads sit *after* them); pad-position KV entries are garbage
     but live beyond the per-row cursor, so decode's length mask never
     reads them and subsequent writes overwrite them in place.
+
+    ``adapters`` ({target: {"lora_a": [n_layers, max_loras, n_in, r],
+    "lora_b": [n_layers, max_loras, r, n_out]}}) and ``adapter_idx``
+    ([B] int32, -1 = base-only) enable the multi-LoRA delta pipeline:
+    the stacked per-layer adapter slices scan together with the layer
+    params, and each attention block adds its gathered per-row delta.
     """
     b, s = tokens.shape
     x = L.embed_fwd(params["embed"], tokens).astype(_param_dtype(cfg))
 
     def body(carry, inp):
-        lp, lc = inp
+        if adapters is None:
+            (lp, lc), ad = inp, None
+        else:
+            lp, lc, ad = inp
         h = L.norm_fwd(lp["ln1"], carry, cfg.norm_eps)
-        att, new_lc = A.attention_prefill(lp["attn"], h, cfg, lc, impl=impl)
+        att, new_lc = A.attention_prefill(
+            lp["attn"], h, cfg, lc, impl=impl, adapters=ad,
+            adapter_idx=adapter_idx, lora_scaling=lora_scaling)
         x1 = carry + att
         h2 = L.norm_fwd(lp["ln2"], x1, cfg.norm_eps)
         x2 = x1 + _ffn_fwd(lp["ffn"], h2, cfg, impl)
         return shard(x2, "batch", "seq"), new_lc
 
-    x, new_kv = L.maybe_scan(body, x, (params["layers"], _cache_xs(cache)),
-                             cfg.scan_layers)
+    xs = (params["layers"], _cache_xs(cache))
+    if adapters is not None:
+        xs = xs + (adapters,)
+    x, new_kv = L.maybe_scan(body, x, xs, cfg.scan_layers)
     if lengths is None:
         x = x[:, -1:]
         pos = jnp.full((b,), s, jnp.int32)
@@ -166,23 +180,35 @@ def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None):
     return logits, new_cache
 
 
-def decode_step(params, token, cfg, cache, impl: str = "auto"):
-    """token: [B] int32 -> (logits [B, V], cache advanced by one)."""
+def decode_step(params, token, cfg, cache, impl: str = "auto",
+                adapters=None, adapter_idx=None, lora_scaling: float = 1.0):
+    """token: [B] int32 -> (logits [B, V], cache advanced by one).
+
+    ``adapters``/``adapter_idx``/``lora_scaling`` as in :func:`prefill` —
+    the same stacked-adapter slices scan with the layers so a mixed batch
+    of base and N distinct adapters decodes in one dispatch.
+    """
     pos = cache["pos"]
     x = L.embed_fwd(params["embed"], token[:, None]).astype(_param_dtype(cfg))
 
     def body(carry, inp):
-        lp, lc = inp
+        if adapters is None:
+            (lp, lc), ad = inp, None
+        else:
+            lp, lc, ad = inp
         h = L.norm_fwd(lp["ln1"], carry, cfg.norm_eps)
-        att, new_lc = A.attention_decode(lp["attn"], h, cfg, lc, pos,
-                                         impl=impl)
+        att, new_lc = A.attention_decode(
+            lp["attn"], h, cfg, lc, pos, impl=impl, adapters=ad,
+            adapter_idx=adapter_idx, lora_scaling=lora_scaling)
         x1 = carry + att
         h2 = L.norm_fwd(lp["ln2"], x1, cfg.norm_eps)
         x2 = x1 + _ffn_fwd(lp["ffn"], h2, cfg, impl)
         return x2, new_lc
 
-    x, new_kv = L.maybe_scan(body, x, (params["layers"], _cache_xs(cache)),
-                             cfg.scan_layers)
+    xs = (params["layers"], _cache_xs(cache))
+    if adapters is not None:
+        xs = xs + (adapters,)
+    x, new_kv = L.maybe_scan(body, x, xs, cfg.scan_layers)
     x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
     logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
     new_cache = dict(new_kv)

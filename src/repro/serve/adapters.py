@@ -1,0 +1,234 @@
+"""Multi-LoRA adapter registry for the serving engine (paper §III).
+
+The paper's second headline claim is the dual multiply/reuse pipeline:
+the base model's weights stay frozen in their quantized AxLLM form while
+LoRA fine-tunes ride alongside as low-rank bf16/fp32 deltas — "without
+altering parameters, retraining, or offline preprocessing".  This module
+is the software shape of that split for continuous batching: up to
+``max_loras`` trained adapters are stacked into batched per-target
+``[n_layers, max_loras, ...]`` A/B tensors, requests carry an adapter
+name, and the engine threads a per-slot ``[B]`` adapter-index array
+(``-1`` = base-only) through prefill waves and the chunked decode scan.
+One dispatch then serves a mixed batch of base and N different adapters
+(:func:`repro.core.axllm_linear.lora_delta_batched` does the gathered
+apply); the base pipeline — quantized matmul, fused wqkv included — is
+untouched.
+
+Layout
+------
+A registered adapter is a pytree ``{target: {"lora_a": [n_layers, n_in,
+rank], "lora_b": [n_layers, rank, n_out]}}`` — exactly what per-layer
+LoRA training produces (see examples/lora_finetune.py).  Targets are the
+attention projections ``wq``/``wk``/``wv``/``wo``; a target missing from
+an adapter stays zero in its stacked row (B=0 ⇒ exact identity).
+Adapters must stay *dense*: quantizing the delta would collapse the two
+pipelines, so :class:`QTensor` leaves are rejected at :meth:`add`.
+
+Lifecycle
+---------
+``add``/``evict`` hot-swap adapters between waves — the stacked tensor
+shapes never change, so the engine's jitted prefill/decode callables are
+reused across swaps (the stack is passed as a jit *argument*, not baked
+in at trace time).  The engine ``acquire``\\ s an adapter at ``submit``
+and ``release``\\ s it when the request finishes, so ``evict`` on an
+adapter with in-flight requests raises instead of yanking live weights.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.axllm_linear import LoRAConfig
+from repro.core.quantization import QTensor
+
+#: targets the serve path can apply (attention projections, paper §III)
+SUPPORTED_TARGETS = ("wq", "wk", "wv", "wo")
+
+
+def target_dims(cfg, target: str) -> Tuple[int, int]:
+    """(n_in, n_out) of an attention projection weight for ``cfg``.
+
+    >>> import dataclasses
+    >>> from repro.configs.base import ModelConfig
+    >>> c = ModelConfig(name="d", family="dense", n_layers=2, d_model=64,
+    ...                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+    ...                 head_dim=16)
+    >>> target_dims(c, "wq"), target_dims(c, "wk"), target_dims(c, "wo")
+    ((64, 64), (64, 32), (64, 64))
+    """
+    d, h, hk, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    dims = {"wq": (d, h * hd), "wk": (d, hk * hd), "wv": (d, hk * hd),
+            "wo": (h * hd, d)}
+    if target not in dims:
+        raise ValueError(f"unsupported LoRA target {target!r}; serveable "
+                         f"targets are {SUPPORTED_TARGETS}")
+    return dims[target]
+
+
+class AdapterRegistry:
+    """Stacked multi-LoRA store consumed by :class:`~repro.serve.engine.
+    ServeEngine`.
+
+    cfg:       the ModelConfig the adapters were trained against (shapes
+               are validated per target at ``add``).
+    lora_cfg:  rank/alpha/targets; every registered adapter must match
+               ``lora_cfg.rank`` (the stacked tensors have one rank).
+    max_loras: stacked capacity — hot ``add``/``evict`` swap within it.
+    """
+
+    def __init__(self, cfg, lora_cfg: Optional[LoRAConfig] = None,
+                 max_loras: int = 4, dtype=jnp.float32):
+        if max_loras < 1:
+            raise ValueError(f"max_loras must be >= 1, got {max_loras}")
+        self.cfg = cfg
+        self.lora_cfg = lora_cfg or LoRAConfig()
+        self.max_loras = max_loras
+        self.dtype = dtype
+        targets = tuple(self.lora_cfg.targets)
+        for t in targets:
+            target_dims(cfg, t)                      # raises on unknown
+        self.targets = targets
+        nl, r = cfg.n_layers, self.lora_cfg.rank
+        self._stacked = {}
+        for t in targets:
+            n_in, n_out = target_dims(cfg, t)
+            self._stacked[t] = {
+                "lora_a": jnp.zeros((nl, max_loras, n_in, r), dtype),
+                "lora_b": jnp.zeros((nl, max_loras, r, n_out), dtype),
+            }
+        self._names: List[Optional[str]] = [None] * max_loras
+        self._refs: List[int] = [0] * max_loras
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def scaling(self) -> float:
+        """alpha / rank — the delta multiplier (jit-static at the engine)."""
+        return self.lora_cfg.scaling
+
+    @property
+    def stacked(self) -> Dict[str, Dict[str, jnp.ndarray]]:
+        """``{target: {"lora_a": [n_layers, max_loras, n_in, r], "lora_b":
+        [n_layers, max_loras, r, n_out]}}`` — passed as an argument to the
+        engine's jitted callables (shapes are swap-invariant)."""
+        return self._stacked
+
+    @property
+    def names(self) -> List[str]:
+        return [n for n in self._names if n is not None]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._names
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def index_of(self, name: str) -> int:
+        """Stacked row of ``name`` (the value requests carry per slot)."""
+        try:
+            return self._names.index(name)
+        except ValueError:
+            raise KeyError(
+                f"unknown adapter {name!r}; registered: {self.names}")
+
+    # -- validation -----------------------------------------------------------
+    def _check_leaf(self, name, target, key, leaf, want_shape):
+        if isinstance(leaf, QTensor):
+            raise TypeError(
+                f"adapter {name!r} {target}/{key} is a QTensor: LoRA deltas "
+                "stay dense (bf16/fp32) — the dual-pipeline split quantizes "
+                "only the frozen base")
+        if not hasattr(leaf, "shape"):
+            raise TypeError(f"adapter {name!r} {target}/{key} is not an "
+                            f"array: {type(leaf)}")
+        if tuple(leaf.shape) != want_shape:
+            got_r = leaf.shape[-1] if key == "lora_a" else leaf.shape[-2]
+            want_r = self.lora_cfg.rank
+            if len(leaf.shape) == len(want_shape) and got_r != want_r:
+                raise ValueError(
+                    f"adapter {name!r} {target}/{key} rank {got_r} != "
+                    f"registry rank {want_r} (one stacked rank per registry)")
+            raise ValueError(
+                f"adapter {name!r} {target}/{key} shape {tuple(leaf.shape)} "
+                f"!= expected {want_shape} for model {self.cfg.name!r}")
+
+    # -- mutation -------------------------------------------------------------
+    def add(self, name: str, adapter: Dict[str, Dict[str, jnp.ndarray]]) -> int:
+        """Validate + stack a trained adapter; returns its row index.
+
+        adapter: ``{target: {"lora_a": [n_layers, n_in, rank], "lora_b":
+        [n_layers, rank, n_out]}}``; targets must be a subset of the
+        registry's (missing targets stay zero ⇒ identity).  Raises
+        TypeError on QTensor leaves, ValueError on shape/rank/target
+        mismatch or a duplicate name, RuntimeError when the registry is
+        full (evict first).
+        """
+        if name in self._names:
+            raise ValueError(f"adapter {name!r} already registered; evict "
+                             "first to replace")
+        if not adapter:
+            raise ValueError(f"adapter {name!r} has no targets")
+        unknown = set(adapter) - set(self.targets)
+        if unknown:
+            raise ValueError(
+                f"adapter {name!r} targets {sorted(unknown)} not in registry "
+                f"targets {self.targets}")
+        nl, r = self.cfg.n_layers, self.lora_cfg.rank
+        for t, ab in adapter.items():
+            n_in, n_out = target_dims(self.cfg, t)
+            if set(ab) != {"lora_a", "lora_b"}:
+                raise ValueError(f"adapter {name!r} target {t!r} needs "
+                                 "exactly {'lora_a', 'lora_b'} leaves")
+            self._check_leaf(name, t, "lora_a", ab["lora_a"], (nl, n_in, r))
+            self._check_leaf(name, t, "lora_b", ab["lora_b"], (nl, r, n_out))
+        try:
+            row = self._names.index(None)
+        except ValueError:
+            raise RuntimeError(
+                f"registry full ({self.max_loras} adapters); evict one "
+                "before adding")
+        # targets absent from this adapter keep their row's zeros (free
+        # rows are zeroed at __init__ and re-zeroed by evict)
+        for t in adapter:
+            for key in ("lora_a", "lora_b"):
+                cur = self._stacked[t][key]
+                self._stacked[t][key] = cur.at[:, row].set(
+                    jnp.asarray(adapter[t][key], self.dtype))
+        self._names[row] = name
+        self._refs[row] = 0
+        return row
+
+    def evict(self, name: str) -> None:
+        """Free ``name``'s row (zeroing it). Raises RuntimeError while any
+        in-flight request still holds the adapter (engine acquire/release)."""
+        row = self.index_of(name)
+        if self._refs[row]:
+            raise RuntimeError(
+                f"adapter {name!r} is assigned to {self._refs[row]} active "
+                "request(s); drain them before evicting")
+        for t in self.targets:
+            for key in ("lora_a", "lora_b"):
+                cur = self._stacked[t][key]
+                self._stacked[t][key] = cur.at[:, row].set(
+                    jnp.zeros(cur.shape[:1] + cur.shape[2:], self.dtype))
+        self._names[row] = None
+        self._refs[row] = 0
+
+    # -- engine lifecycle ------------------------------------------------------
+    def acquire(self, name: str) -> int:
+        """Pin ``name`` for an in-flight request; returns its row index."""
+        row = self.index_of(name)
+        self._refs[row] += 1
+        return row
+
+    def release(self, name: str) -> None:
+        row = self.index_of(name)
+        if self._refs[row] <= 0:
+            raise RuntimeError(f"release of adapter {name!r} without a "
+                               "matching acquire")
+        self._refs[row] -= 1
+
+    def refcount(self, name: str) -> int:
+        return self._refs[self.index_of(name)]

@@ -53,7 +53,10 @@ def decode_steps(decode_fn, params, last, cache, rng, stop_mask, gen,
 
     decode_fn:  ``(params, token [B], cache) -> (logits [B, V], cache)``
                 (a ``ModelAPI.decode``; the cache must carry a per-row
-                ``"pos"`` cursor, which all families do).
+                ``"pos"`` cursor, which all families do). Per-slot state
+                beyond the carry — e.g. the multi-LoRA ``[B]``
+                adapter-index row — is closed over by the engine's
+                wrapper, so the scan itself stays adapter-agnostic.
     last:       [B] int32 last sampled token per slot.
     stop_mask:  [B] bool; True rows are dead (empty or finished slots).
     gen:        [B] int32 tokens generated so far (prefill token included).

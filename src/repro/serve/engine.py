@@ -53,9 +53,21 @@ Scheduler contract
 - **Long prompts.** `long_prompt="truncate"` keeps the last
   `max_len - 1` prompt tokens (flagging `prompt_truncated`);
   `"reject"` raises at `submit()`. Nothing silently overflows the cache.
+- **Multi-LoRA serving (the paper's dual-pipeline claim).** Built with
+  `adapters=AdapterRegistry`, the engine serves mixed batches of the
+  frozen base model and up to `max_loras` registered LoRA fine-tunes in
+  the same waves and decode chunks: `submit(..., adapter="name")` pins a
+  registered adapter, a per-slot `[B]` adapter-index array (−1 = base)
+  threads through every prefill wave and the chunked decode scan, and
+  each attention block adds the gathered low-rank bf16 delta on top of
+  the untouched (quantized, fused included) base matmul — no parameter
+  rewrites, no per-adapter engine. The stacked A/B tensors are jit
+  *arguments*, so hot `add`/`evict` between waves reuses every compile.
+  Recurrent families reject registries at engine init.
 - **Stats.** `engine.stats` tracks admitted/finished/truncated requests,
-  decode steps/tokens, prefill waves/tokens/compiles and mean slot
-  occupancy; `stats.as_dict()` feeds `benchmarks/serve_bench.py`.
+  decode steps/tokens, prefill waves/tokens/compiles, LoRA-carrying
+  requests and mean slot occupancy; `stats.as_dict()` feeds
+  `benchmarks/serve_bench.py`.
 
 `generate()` returns token lists for all submitted prompts; requests
 still in flight when `max_steps` runs out come back with their partial
@@ -75,11 +87,19 @@ import jax.numpy as jnp
 from repro.core.axllm_linear import deploy_quantize
 from repro.core.quantization import QuantConfig
 from repro.models.model import ModelAPI, get_model
+from repro.serve.adapters import AdapterRegistry
 from repro.serve.decode import decode_steps
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: prompt in, generated ``tokens`` out.
+
+    adapter: name of a registered LoRA adapter to decode with (None =
+    base model). The engine acquires the adapter at ``submit`` and
+    releases it when the request finishes, so a named adapter cannot be
+    evicted out from under an in-flight request.
+    """
     rid: int
     prompt: np.ndarray            # [S] int32 (post long-prompt policy)
     max_new: int = 32
@@ -87,6 +107,7 @@ class Request:
     done: bool = False
     truncated: bool = False           # generation cut short (cache/steps)
     prompt_truncated: bool = False    # prompt clipped by long_prompt policy
+    adapter: Optional[str] = None     # LoRA adapter name (None = base)
 
 
 @dataclasses.dataclass
@@ -100,6 +121,7 @@ class EngineStats:
     prefill_waves: int = 0
     prefill_tokens: int = 0
     prefill_compiles: int = 0
+    lora_requests: int = 0            # admitted requests carrying an adapter
     occupancy_sum: float = 0.0        # sum over steps of active/n_slots
 
     @property
@@ -131,7 +153,15 @@ def _sample_tokens(logits, rng, *, greedy: bool, vocab_size: int):
 
 
 def _pow2_bucket(n: int, lo: int, hi: int) -> int:
-    """Smallest power of two >= n, floored at lo, capped at hi."""
+    """Smallest power of two >= n, floored at lo, capped at hi.
+
+    >>> _pow2_bucket(5, 1, 16)
+    8
+    >>> _pow2_bucket(3, 8, 64)      # floored at lo
+    8
+    >>> _pow2_bucket(100, 8, 64)    # capped at hi
+    64
+    """
     b = lo
     while b < n:
         b *= 2
@@ -139,13 +169,30 @@ def _pow2_bucket(n: int, lo: int, hi: int) -> int:
 
 
 class ServeEngine:
+    """Continuous-batching scheduler over ``n_slots`` request slots.
+
+    Construction deploys ``params`` for serving: ``quantize=True``
+    converts weight matrices to ``quant_bits`` AxLLM codes
+    (`deploy_quantize`), ``fuse_qkv`` rewrites them through
+    ``api.fuse_params`` (wqkv / gate_up), and ``adapters`` attaches an
+    :class:`~repro.serve.adapters.AdapterRegistry` for multi-LoRA
+    serving (attention families only). ``decode_chunk`` sets the
+    on-device scan length per decode dispatch; ``eos_id`` /
+    ``long_prompt`` / ``max_len`` define the stop conditions (see the
+    module docstring for the full scheduler contract).
+
+    Serve with ``submit(prompt, max_new, adapter=...)`` + ``step()`` /
+    ``run()``, or the one-shot ``generate(prompts, ...)``.
+    """
+
     def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 512,
                  quantize: bool = False, quant_bits: int = 8,
                  impl: str = "auto", greedy: bool = True, seed: int = 0,
                  eos_id: Optional[int] = None,
                  long_prompt: str = "truncate",
                  decode_chunk: Optional[int] = None,
-                 fuse_qkv: Optional[bool] = None):
+                 fuse_qkv: Optional[bool] = None,
+                 adapters: Optional[AdapterRegistry] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "ServeEngine drives token-only prefill; encoder-decoder "
@@ -177,6 +224,12 @@ class ServeEngine:
         if dc < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {dc}")
         self.decode_chunk = dc
+        self.registry = adapters
+        if adapters is not None:
+            self._validate_adapters(adapters)
+        # per-slot LoRA row into registry.stacked; -1 = base-only. Threaded
+        # through every prefill wave and decode chunk as a [B] jit argument.
+        self.adapter_slots = np.full((n_slots,), -1, np.int32)
         self.rng = jax.random.PRNGKey(seed)
         self.cache = self.api.init_cache(n_slots, max_len)
         self._validate_cache_spec()
@@ -207,8 +260,42 @@ class ServeEngine:
 
         jax.tree_util.tree_map(check, self.cache, spec)
 
+    def _validate_adapters(self, reg: AdapterRegistry):
+        """Adapter-aware deployment validation: the family must expose the
+        LoRA delta-pipeline hooks and the registry must have been built
+        against a dimensionally identical config (the stacked A/B tensors
+        scan with this model's layers)."""
+        if not self.api.supports_lora:
+            raise ValueError(
+                f"family {self.cfg.family!r} has no multi-LoRA serving "
+                "path: its recurrent state folding offers no per-slot "
+                "projection hook for the delta pipeline (attention "
+                "families only)")
+        from repro.serve.adapters import target_dims
+        if reg.cfg.n_layers != self.cfg.n_layers:
+            raise ValueError(
+                f"adapter registry built for n_layers={reg.cfg.n_layers} "
+                f"but engine serves n_layers={self.cfg.n_layers}")
+        for t in reg.targets:
+            if target_dims(reg.cfg, t) != target_dims(self.cfg, t):
+                raise ValueError(
+                    f"adapter registry target {t!r} dims "
+                    f"{target_dims(reg.cfg, t)} != model dims "
+                    f"{target_dims(self.cfg, t)}")
+
     # -- request management ---------------------------------------------------
-    def submit(self, prompt, max_new: int = 32) -> int:
+    def submit(self, prompt, max_new: int = 32,
+               adapter: Optional[str] = None) -> int:
+        """Queue a prompt ([S] ints) for generation; returns a request id.
+
+        adapter: name of a registered LoRA adapter to serve this request
+        with (requires the engine's ``adapters=AdapterRegistry``; unknown
+        names raise KeyError here, not mid-stream). The adapter is pinned
+        until the request finishes."""
+        if adapter is not None and self.registry is None:
+            raise ValueError(
+                "submit(adapter=...) needs an engine built with "
+                "adapters=AdapterRegistry")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -221,8 +308,10 @@ class ServeEngine:
                     f"resubmit shorter or use long_prompt='truncate'")
             prompt = prompt[-cap:]        # keep the most recent context
             prompt_truncated = True
+        if adapter is not None:
+            self.registry.acquire(adapter)    # KeyError on unknown name
         req = Request(self._rid, prompt, max_new,
-                      prompt_truncated=prompt_truncated)
+                      prompt_truncated=prompt_truncated, adapter=adapter)
         self._rid += 1
         self.queue.append(req)
         return req.rid
@@ -248,18 +337,27 @@ class ServeEngine:
             self._prefill_group(group, free)
 
     def _get_prefill(self, wave_bucket: int, padded_len: int):
+        """Jitted prefill for one (wave, padded_len) bucket. With an
+        adapter registry the callable additionally takes the stacked A/B
+        pytree and the wave's [wb] adapter-index row as jit arguments, so
+        hot add/evict never invalidates the compile cache."""
         key = (wave_bucket, padded_len)
         if key not in self._prefill_cache:
             api, max_len = self.api, self.max_len
-            if api.ragged_prefill:
-                def fn(params, toks, lengths):
-                    cache = api.init_cache(toks.shape[0], max_len)
-                    return api.prefill(params, {"tokens": toks}, cache,
-                                       lengths=lengths)
-            else:
-                def fn(params, toks, lengths):
-                    cache = api.init_cache(toks.shape[0], max_len)
-                    return api.prefill(params, {"tokens": toks}, cache)
+            lora = self.registry is not None
+            scaling = self.registry.scaling if lora else None
+            ragged = api.ragged_prefill
+
+            def fn(params, toks, lengths, stacked=None, aidx=None):
+                cache = api.init_cache(toks.shape[0], max_len)
+                kw = {}
+                if ragged:
+                    kw["lengths"] = lengths
+                if lora:
+                    kw.update(adapters=stacked, adapter_idx=aidx,
+                              lora_scaling=scaling)
+                return api.prefill(params, {"tokens": toks}, cache, **kw)
+
             self._prefill_cache[key] = jax.jit(fn)
             self.stats.prefill_compiles += 1
         return self._prefill_cache[key]
@@ -274,23 +372,35 @@ class ServeEngine:
             pl = lens[0]                  # equal-length group, exact
         toks = np.zeros((wb, pl), np.int32)
         lengths = np.ones((wb,), np.int32)
+        aidx = np.full((wb,), -1, np.int32)
         for i, r in enumerate(group):
             toks[i, : len(r.prompt)] = r.prompt
             lengths[i] = len(r.prompt)
+            if r.adapter is not None:
+                aidx[i] = self.registry.index_of(r.adapter)
         fn = self._get_prefill(wb, pl)
-        logits, wave_cache = fn(self.params, jnp.asarray(toks),
-                                jnp.asarray(lengths))
+        if self.registry is not None:
+            logits, wave_cache = fn(self.params, jnp.asarray(toks),
+                                    jnp.asarray(lengths),
+                                    self.registry.stacked,
+                                    jnp.asarray(aidx))
+        else:
+            logits, wave_cache = fn(self.params, jnp.asarray(toks),
+                                    jnp.asarray(lengths))
         first = self._sample(logits)
         src, dst = [], []
         for i, r in enumerate(group):
             r.tokens.append(int(first[i]))
             self.stats.admitted += 1
             self.stats.prefill_tokens += int(lengths[i])
+            if r.adapter is not None:
+                self.stats.lora_requests += 1
             if self._stop_reason(r) is not None:
                 self._finish(r)           # EOS/max_new on the first token
                 continue
             slot = free.pop(0)
             self.slots[slot] = r
+            self.adapter_slots[slot] = aidx[i]
             src.append(i)
             dst.append(slot)
         if src:
@@ -330,6 +440,8 @@ class ServeEngine:
 
     def _finish(self, r: Request):
         r.done = True
+        if r.adapter is not None:
+            self.registry.release(r.adapter)   # unpin: evict becomes legal
         self.finished.append(r)
         self.stats.finished += 1
         if r.truncated:
@@ -337,25 +449,48 @@ class ServeEngine:
 
     # -- decode ----------------------------------------------------------------
     def _get_chunk_fn(self, n: int):
-        """Jitted scan-decode for chunk length n (cache donated)."""
+        """Jitted scan-decode for chunk length n (cache donated).
+
+        With an adapter registry the callable takes the stacked A/B pytree
+        and the per-slot [B] adapter-index row as leading jit arguments
+        (so registry hot-swaps reuse the compile cache) and the wrapped
+        ``api.decode`` runs the gathered LoRA delta pipeline alongside the
+        untouched base path every scan step."""
         key = (n, self.greedy)
         if key not in self._chunk_fns:
             api, cfg = self.api, self.cfg
             eos_id, max_len, greedy = self.eos_id, self.max_len, self.greedy
+            if self.registry is None:
+                def fn(params, last, cache, rng, stop, gen, max_new):
+                    return decode_steps(
+                        api.decode, params, last, cache, rng, stop, gen,
+                        max_new, n=n, vocab_size=cfg.vocab_size,
+                        max_len=max_len, eos_id=eos_id, greedy=greedy)
 
-            def fn(params, last, cache, rng, stop, gen, max_new):
-                return decode_steps(
-                    api.decode, params, last, cache, rng, stop, gen,
-                    max_new, n=n, vocab_size=cfg.vocab_size,
-                    max_len=max_len, eos_id=eos_id, greedy=greedy)
+                self._chunk_fns[key] = jax.jit(fn, donate_argnums=(2,))
+            else:
+                scaling = self.registry.scaling
 
-            self._chunk_fns[key] = jax.jit(fn, donate_argnums=(2,))
+                def fn(params, stacked, aidx, last, cache, rng, stop, gen,
+                       max_new):
+                    def dec(p, t, c):
+                        return api.decode(p, t, c, adapters=stacked,
+                                          adapter_idx=aidx,
+                                          lora_scaling=scaling)
+                    return decode_steps(
+                        dec, params, last, cache, rng, stop, gen,
+                        max_new, n=n, vocab_size=cfg.vocab_size,
+                        max_len=max_len, eos_id=eos_id, greedy=greedy)
+
+                self._chunk_fns[key] = jax.jit(fn, donate_argnums=(4,))
         return self._chunk_fns[key]
 
     def step(self, max_n: Optional[int] = None) -> bool:
         """Admit a prefill wave, then run ONE chunked decode dispatch of up
         to min(decode_chunk, max_n, largest per-slot remaining budget)
-        on-device steps. Returns False when no work is left."""
+        on-device steps. With an adapter registry the per-slot [n_slots]
+        adapter-index row rides along so mixed base/LoRA slots decode in
+        the same scan. Returns False when no work is left."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         while not active and self.queue:
@@ -384,8 +519,15 @@ class ServeEngine:
         n = max(1, min(self.decode_chunk, remaining,
                        max_n if max_n is not None else remaining))
         fn = self._get_chunk_fn(n)
-        out = fn(self.params, jnp.asarray(last), self.cache, self.rng,
-                 jnp.asarray(stop), jnp.asarray(gen), jnp.asarray(budget))
+        if self.registry is not None:
+            out = fn(self.params, self.registry.stacked,
+                     jnp.asarray(self.adapter_slots), jnp.asarray(last),
+                     self.cache, self.rng, jnp.asarray(stop),
+                     jnp.asarray(gen), jnp.asarray(budget))
+        else:
+            out = fn(self.params, jnp.asarray(last), self.cache, self.rng,
+                     jnp.asarray(stop), jnp.asarray(gen),
+                     jnp.asarray(budget))
         self.cache, self.rng = out.cache, out.rng
         toks = np.asarray(out.tokens)
         valid = np.asarray(out.valid)
@@ -402,6 +544,7 @@ class ServeEngine:
             if self._stop_reason(r) is not None:
                 self._finish(r)
                 self.slots[i] = None
+                self.adapter_slots[i] = -1
         return True
 
     def run(self, max_steps: int = 10000):
@@ -420,9 +563,11 @@ class ServeEngine:
         the source engine's config and stop semantics, so mismatched
         engines are rejected rather than silently decoding wrong tokens."""
         mine = (self.cfg, self.eos_id, self.max_len, self.greedy,
-                self.n_slots)
+                self.n_slots, self.registry is None,
+                None if self.registry is None else self.registry.scaling)
         theirs = (other.cfg, other.eos_id, other.max_len, other.greedy,
-                  other.n_slots)
+                  other.n_slots, other.registry is None,
+                  None if other.registry is None else other.registry.scaling)
         if mine != theirs:
             raise ValueError(
                 "adopt_compiled: engines differ in (cfg, eos_id, max_len, "
@@ -434,8 +579,12 @@ class ServeEngine:
         return self
 
     def generate(self, prompts, max_new: int = 32, max_steps: int = 10000,
-                 return_requests: bool = False):
+                 return_requests: bool = False, adapters=None):
         """Serve `prompts`; returns one token list per prompt (in order).
+
+        adapters: optional per-prompt list of registered LoRA adapter
+        names (None entries decode with the base model) — a mixed batch
+        of base and N distinct adapters runs in the same waves/chunks.
 
         Requests still in flight after `max_steps` are cancelled: they come
         back with partial tokens and `truncated=True`, and their slots/queue
@@ -443,8 +592,14 @@ class ServeEngine:
         resuming (and mutating) already-returned results.
         `return_requests=True` returns the Request objects (tokens +
         truncated/prompt_truncated flags)."""
+        if adapters is None:
+            adapters = [None] * len(prompts)
+        if len(adapters) != len(prompts):
+            raise ValueError(f"adapters list length {len(adapters)} != "
+                             f"{len(prompts)} prompts")
         start = len(self.finished)
-        ids = [self.submit(p, max_new) for p in prompts]
+        ids = [self.submit(p, max_new, adapter=a)
+               for p, a in zip(prompts, adapters)]
         want = set(ids)
         self.run(max_steps)
         new = self.finished[start:]
@@ -466,12 +621,17 @@ class ServeEngine:
         for i, s in enumerate(self.slots):
             if s is not None and s.rid == rid:
                 self.slots[i] = None
+                self.adapter_slots[i] = -1
+                if s.adapter is not None:
+                    self.registry.release(s.adapter)
                 s.truncated = True
                 self.stats.truncated += 1
                 return s
         for r in self.queue:
             if r.rid == rid:
                 self.queue.remove(r)
+                if r.adapter is not None:
+                    self.registry.release(r.adapter)
                 r.truncated = True
                 self.stats.truncated += 1
                 return r

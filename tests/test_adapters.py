@@ -1,0 +1,316 @@
+"""Multi-LoRA serving: adapter registry lifecycle, the gathered batched
+delta pipeline, and engine equivalence — a mixed batch of base + N
+distinct adapters must decode token-identically to per-request runs
+(fp + int8 + interpret mode, fused and unfused), while recurrent
+families reject registries with a clear error."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import axllm_linear as AL
+from repro.models.model import get_model
+from repro.serve.adapters import AdapterRegistry, target_dims
+from repro.serve.engine import ServeEngine
+
+CFG = ModelConfig(name="la", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, vocab_pad_multiple=64, dtype="float32")
+LCFG = AL.LoRAConfig(rank=4, alpha=8.0, targets=("wq", "wv", "wo"))
+
+
+def make_adapter(cfg, lcfg, seed, scale=0.3, targets=None):
+    """Random adapter with non-zero B (so it measurably changes tokens)."""
+    rng = np.random.default_rng(seed)
+    ad = {}
+    for t in targets or lcfg.targets:
+        n_in, n_out = target_dims(cfg, t)
+        ad[t] = {
+            "lora_a": jnp.asarray(
+                rng.normal(size=(cfg.n_layers, n_in, lcfg.rank))
+                / np.sqrt(lcfg.rank), jnp.float32),
+            "lora_b": jnp.asarray(
+                rng.normal(size=(cfg.n_layers, lcfg.rank, n_out)) * scale,
+                jnp.float32),
+        }
+    return ad
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_model(CFG).init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture()
+def registry():
+    reg = AdapterRegistry(CFG, LCFG, max_loras=3)
+    reg.add("a1", make_adapter(CFG, LCFG, 1))
+    reg.add("a2", make_adapter(CFG, LCFG, 2))
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# lora_delta_batched: the gathered second pipeline
+# ---------------------------------------------------------------------------
+
+def test_delta_batched_matches_unbatched_rows():
+    """Row i of the batched gathered delta == the unbatched two-matmul
+    LoRA delta with adapter idx[i]; -1 rows are exact zeros."""
+    rng = np.random.default_rng(0)
+    L, n_in, r, n_out = 3, 16, 4, 24
+    stack = {"lora_a": jnp.asarray(rng.normal(size=(L, n_in, r)),
+                                   jnp.float32),
+             "lora_b": jnp.asarray(rng.normal(size=(L, r, n_out)),
+                                   jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(4, 5, n_in)), jnp.float32)
+    idx = jnp.asarray([2, -1, 0, 1], jnp.int32)
+    out = AL.lora_delta_batched(x, stack, idx, 0.5)
+    assert out.shape == (4, 5, n_out)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    for i, j in ((0, 2), (2, 0), (3, 1)):
+        ref = 0.5 * (x[i] @ stack["lora_a"][j]) @ stack["lora_b"][j]
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_delta_batched_all_base_is_zero():
+    stack = {"lora_a": jnp.ones((2, 8, 4)), "lora_b": jnp.ones((2, 4, 8))}
+    x = jnp.ones((3, 8))
+    out = AL.lora_delta_batched(x, stack, jnp.full((3,), -1, jnp.int32), 2.0)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Registry lifecycle + validation
+# ---------------------------------------------------------------------------
+
+def test_registry_add_index_evict():
+    reg = AdapterRegistry(CFG, LCFG, max_loras=2)
+    assert len(reg) == 0
+    row1 = reg.add("fr", make_adapter(CFG, LCFG, 1))
+    row2 = reg.add("de", make_adapter(CFG, LCFG, 2))
+    assert {row1, row2} == {0, 1}
+    assert reg.index_of("de") == row2 and "fr" in reg
+    reg.evict("fr")
+    assert "fr" not in reg and len(reg) == 1
+    # the freed row is reused and its tensors were zeroed
+    assert reg.add("es", make_adapter(CFG, LCFG, 3)) == row1
+
+
+def test_registry_full_and_duplicate():
+    reg = AdapterRegistry(CFG, LCFG, max_loras=1)
+    reg.add("fr", make_adapter(CFG, LCFG, 1))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.add("fr", make_adapter(CFG, LCFG, 2))
+    with pytest.raises(RuntimeError, match="registry full"):
+        reg.add("de", make_adapter(CFG, LCFG, 2))
+
+
+def test_registry_rank_mismatch():
+    reg = AdapterRegistry(CFG, LCFG, max_loras=2)
+    wrong = make_adapter(CFG, dataclasses.replace(LCFG, rank=8), 1)
+    with pytest.raises(ValueError, match="rank 8 != registry rank 4"):
+        reg.add("fr", wrong)
+
+
+def test_registry_rejects_quantized_adapter():
+    """Quantize-check: the delta pipeline stays dense by construction."""
+    from repro.core.quantization import QuantConfig, quantize
+    reg = AdapterRegistry(CFG, LCFG, max_loras=2)
+    ad = make_adapter(CFG, LCFG, 1)
+    ad["wq"]["lora_b"] = quantize(ad["wq"]["lora_b"], QuantConfig())
+    with pytest.raises(TypeError, match="QTensor"):
+        reg.add("fr", ad)
+
+
+def test_registry_unknown_target():
+    reg = AdapterRegistry(CFG, LCFG, max_loras=2)
+    ad = make_adapter(CFG, LCFG, 1)
+    ad["gate"] = ad.pop("wq")
+    with pytest.raises(ValueError, match="targets"):
+        reg.add("fr", ad)
+
+
+def test_registry_missing_target_is_identity(params):
+    """An adapter targeting only wq leaves wv/wo rows zero — serving it
+    must equal serving a single-target adapter, not crash or drift."""
+    reg = AdapterRegistry(CFG, LCFG, max_loras=2)
+    reg.add("q-only", make_adapter(CFG, LCFG, 5, targets=("wq",)))
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=64, adapters=reg)
+    out = eng.generate([np.arange(8)], max_new=6, adapters=["q-only"])
+    assert len(out[0]) == 6
+
+
+def test_evict_while_assigned_raises(params, registry):
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, adapters=registry)
+    eng.submit(np.arange(8), max_new=4, adapter="a1")
+    with pytest.raises(RuntimeError, match="active request"):
+        registry.evict("a1")
+    eng.run()
+    registry.evict("a1")                      # drained: now legal
+    assert "a1" not in registry
+
+
+def test_unknown_adapter_rejected_at_submit(params, registry):
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, adapters=registry)
+    with pytest.raises(KeyError, match="unknown adapter"):
+        eng.submit(np.arange(8), adapter="nope")
+    with pytest.raises(ValueError, match="AdapterRegistry"):
+        ServeEngine(CFG, params, n_slots=2, max_len=64).submit(
+            np.arange(8), adapter="a1")
+
+
+def test_registry_dim_mismatch_at_engine_init(params):
+    other = dataclasses.replace(CFG, n_layers=3)
+    reg = AdapterRegistry(other, LCFG)
+    with pytest.raises(ValueError, match="n_layers"):
+        ServeEngine(CFG, params, n_slots=2, max_len=64, adapters=reg)
+
+
+def test_recurrent_family_rejects_registry():
+    cfg = ModelConfig(name="lsx", family="ssm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+                      vocab_pad_multiple=64, xlstm_slstm_every=2,
+                      dtype="float32", remat=False)
+    p = get_model(cfg).init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="no multi-LoRA serving path"):
+        ServeEngine(cfg, p, n_slots=2, max_len=64,
+                    adapters=AdapterRegistry(cfg, LCFG))
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence: mixed batch == per-request
+# ---------------------------------------------------------------------------
+
+PROMPTS = [np.arange(8), np.arange(8) + 50, np.arange(12) + 100]
+NAMES = [None, "a1", "a2"]
+
+
+def _mixed_vs_solo(cfg, params, registry, *, quantize=False, impl="auto",
+                   fuse_qkv=None, max_new=8):
+    """Assert one mixed engine run == three solo runs, token for token."""
+    eng = ServeEngine(cfg, params, n_slots=len(PROMPTS), max_len=64,
+                      quantize=quantize, impl=impl, fuse_qkv=fuse_qkv,
+                      adapters=registry)
+    mixed = eng.generate(PROMPTS, max_new=max_new, adapters=NAMES)
+    for p, name, got in zip(PROMPTS, NAMES, mixed):
+        solo = ServeEngine(cfg, params, n_slots=1, max_len=64,
+                           quantize=quantize, impl=impl, fuse_qkv=fuse_qkv,
+                           adapters=registry)
+        assert got == solo.generate([p], max_new=max_new,
+                                    adapters=[name])[0], name
+    return mixed
+
+
+def test_mixed_batch_equals_per_request_fp(params, registry):
+    mixed = _mixed_vs_solo(CFG, params, registry)
+    # the adapters actually steer generation away from the base model
+    base = ServeEngine(CFG, params, n_slots=1, max_len=64).generate(
+        [PROMPTS[1]], max_new=8)[0]
+    assert mixed[1] != base
+    # base-only rows are bit-identical to a no-registry engine
+    assert mixed[0] == ServeEngine(CFG, params, n_slots=1,
+                                   max_len=64).generate([PROMPTS[0]],
+                                                        max_new=8)[0]
+
+
+def test_mixed_batch_equals_per_request_int8(params, registry):
+    _mixed_vs_solo(CFG, params, registry, quantize=True)
+
+
+def test_mixed_batch_int8_interpret_mode(params, registry):
+    """Pallas kernel body (interpret mode) under the batched LoRA path."""
+    _mixed_vs_solo(CFG, params, registry, quantize=True,
+                   impl="pallas_interpret", max_new=3)
+
+
+def test_fused_qkv_lora_matches_unfused(params, registry):
+    """Adapter deltas land in the fused wqkv output's q/k/v columns —
+    fused and unfused mixed batches decode token-identically."""
+    unfused = _mixed_vs_solo(CFG, params, registry, quantize=True)
+    eng = ServeEngine(CFG, params, n_slots=3, max_len=64, quantize=True,
+                      fuse_qkv=True, adapters=registry)
+    assert eng.generate(PROMPTS, max_new=8, adapters=NAMES) == unfused
+
+
+def test_lora_decode_matches_direct_api(params, registry):
+    """Engine serving == raw api.prefill/api.decode greedy loop with the
+    same stacked adapters (the scheduler adds nothing numerically)."""
+    api = get_model(CFG)
+    name = "a1"
+    idx = jnp.asarray([registry.index_of(name)], jnp.int32)
+    prompt = PROMPTS[1]
+    cache = api.init_cache(1, 64)
+    logits, cache = api.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, cache,
+        adapters=registry.stacked, adapter_idx=idx,
+        lora_scaling=registry.scaling)
+    toks = [int(jnp.argmax(logits[0, : CFG.vocab_size]))]
+    while len(toks) < 6:
+        logits, cache = api.decode(
+            params, jnp.asarray([toks[-1]], jnp.int32), cache,
+            adapters=registry.stacked, adapter_idx=idx,
+            lora_scaling=registry.scaling)
+        toks.append(int(jnp.argmax(logits[0, : CFG.vocab_size])))
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=64, adapters=registry)
+    assert eng.generate([prompt], max_new=6, adapters=[name])[0] == toks
+
+
+def test_chunked_lora_decode_matches_per_token(params, registry):
+    ref = ServeEngine(CFG, params, n_slots=2, max_len=64, decode_chunk=1,
+                      adapters=registry).generate(
+        PROMPTS, max_new=6, adapters=NAMES)
+    for chunk in (3, 8):
+        eng = ServeEngine(CFG, params, n_slots=2, max_len=64,
+                          decode_chunk=chunk, adapters=registry)
+        assert eng.generate(PROMPTS, max_new=6, adapters=NAMES) == ref
+
+
+def test_moe_family_mixed_batch():
+    cfg = ModelConfig(name="lmo", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, n_experts=4,
+                      top_k=2, expert_pad_to=4, capacity_factor=8.0,
+                      dtype="float32", remat=False)
+    p = get_model(cfg).init(jax.random.PRNGKey(3))
+    reg = AdapterRegistry(cfg, LCFG, max_loras=2)
+    reg.add("a1", make_adapter(cfg, LCFG, 1))
+    reg.add("a2", make_adapter(cfg, LCFG, 2))
+    eng = ServeEngine(cfg, p, n_slots=3, max_len=64, adapters=reg)
+    mixed = eng.generate(PROMPTS, max_new=5, adapters=NAMES)
+    for pr, name, got in zip(PROMPTS, NAMES, mixed):
+        solo = ServeEngine(cfg, p, n_slots=1, max_len=64, adapters=reg)
+        assert got == solo.generate([pr], max_new=5, adapters=[name])[0]
+
+
+def test_hot_add_evict_between_waves(params):
+    """Swap an adapter mid-stream: stacked shapes are invariant, so the
+    jitted prefill/decode callables are reused and new requests pick up
+    the new weights."""
+    reg = AdapterRegistry(CFG, LCFG, max_loras=2)
+    reg.add("a1", make_adapter(CFG, LCFG, 1))
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, adapters=reg)
+    first = eng.generate([PROMPTS[0]], max_new=6, adapters=["a1"])
+    compiles = eng.stats.prefill_compiles
+    reg.evict("a1")
+    reg.add("a3", make_adapter(CFG, LCFG, 7))
+    second = eng.generate([PROMPTS[0]], max_new=6, adapters=["a3"])
+    assert eng.stats.prefill_compiles == compiles     # no recompiles
+    assert second != first                            # new weights took
+    solo = ServeEngine(CFG, params, n_slots=1, max_len=64, adapters=reg)
+    assert second == solo.generate([PROMPTS[0]], max_new=6,
+                                   adapters=["a3"])
+
+
+def test_cancelled_lora_request_releases_adapter(params, registry):
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=64, adapters=registry)
+    reqs = eng.generate([np.arange(8)] * 3, max_new=8, max_steps=2,
+                        return_requests=True,
+                        adapters=["a1", "a1", "a2"])
+    assert any(r.truncated for r in reqs)
+    assert registry.refcount("a1") == 0 and registry.refcount("a2") == 0
+    registry.evict("a1")                              # nothing pinned

@@ -95,6 +95,23 @@ def test_qconcat_rejects_mismatches():
         concat_weights([a8, _rand(rng, (64, 32))])
 
 
+def test_concat_weights_mixed_error_branch():
+    """concat_weights on a QTensor/dense mix raises TypeError in either
+    order (fuse after deploy_quantize, never across the boundary); the
+    all-dense path still concatenates plain arrays."""
+    rng = np.random.default_rng(4)
+    dense_a, dense_b = _rand(rng, (64, 32)), _rand(rng, (64, 16))
+    qt = quantize(dense_a, QuantConfig(8, "affine", "per_channel"))
+    for mix in ([qt, dense_b], [dense_b, qt], [dense_a, qt, dense_b]):
+        with pytest.raises(TypeError, match="mix of QTensor and dense"):
+            concat_weights(mix)
+    fused = concat_weights([dense_a, dense_b])
+    assert fused.shape == (64, 48)
+    np.testing.assert_array_equal(
+        np.asarray(fused), np.asarray(jnp.concatenate([dense_a, dense_b],
+                                                      axis=-1)))
+
+
 # ---------------------------------------------------------------------------
 # Fused matmul: one [K, N1+N2+N3] launch == three separate launches
 # ---------------------------------------------------------------------------

@@ -1,0 +1,139 @@
+"""Docs gate for CI: doctests, link integrity, and flags-table drift.
+
+Three checks, all of which must pass:
+
+1. **Doctests** over the doc-bearing modules listed in ``DOCTEST_MODULES``
+   (signature-level examples in the serve/kernel surface). The run also
+   fails if the modules collectively contain zero doctests — an empty
+   pass would make this gate decorative.
+2. **Links**: every relative link/image in ``docs/``, the root README
+   and the dist README must resolve to an existing file.
+3. **Flags drift**: the ``launch/serve.py`` flags table in
+   docs/ARCHITECTURE.md must list exactly the flags the parser exposes
+   (``--help`` is the source of truth) — update both together.
+
+Run:  PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import doctest
+import importlib
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+DOCTEST_MODULES = [
+    "repro.serve.adapters",
+    "repro.serve.engine",
+    "repro.serve.decode",
+    "repro.kernels.ops",
+    "repro.core.axllm_linear",
+    "repro.core.quantization",
+]
+
+DOC_FILES = [
+    REPO / "README.md",
+    REPO / "src" / "repro" / "dist" / "README.md",
+    *sorted((REPO / "docs").glob("*.md")),
+]
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+FLAG_ROW_RE = re.compile(r"^\|\s*`(--[^`]+)`")
+HELP_FLAG_RE = re.compile(r"--[a-z][a-z0-9-]*")
+
+
+def check_doctests() -> list:
+    errors, attempted = [], 0
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        res = doctest.testmod(mod, verbose=False)
+        attempted += res.attempted
+        if res.failed:
+            errors.append(f"doctest: {res.failed} failure(s) in {name}")
+    if not attempted:
+        errors.append("doctest: zero doctests found across "
+                      f"{len(DOCTEST_MODULES)} modules — the gate is empty")
+    print(f"  doctests: {attempted} examples across "
+          f"{len(DOCTEST_MODULES)} modules")
+    return errors
+
+
+def check_links() -> list:
+    errors, n = [], 0
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1).split("#")[0]
+            if not target or target.startswith(("http://", "https://",
+                                               "mailto:")):
+                continue
+            n += 1
+            resolved = (doc.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"link: {doc.relative_to(REPO)} -> {target} "
+                              "does not exist")
+    print(f"  links: {n} relative links across {len(DOC_FILES)} files")
+    return errors
+
+
+def documented_flags(arch_md: pathlib.Path) -> set:
+    """Flags from the ARCHITECTURE.md table (rows like ``| `--arch` | ...``;
+    combined cells like ``--fuse-qkv` / `--no-fuse-qkv`` list both)."""
+    flags = set()
+    in_table = False
+    for line in arch_md.read_text().splitlines():
+        if FLAG_ROW_RE.match(line):
+            in_table = True
+            cell = line.split("|")[1]
+            flags.update(HELP_FLAG_RE.findall(cell))
+        elif in_table and not line.startswith("|"):
+            in_table = False
+    return flags
+
+
+def check_flags_drift() -> list:
+    arch_md = REPO / "docs" / "ARCHITECTURE.md"
+    if not arch_md.exists():
+        return ["flags: docs/ARCHITECTURE.md missing"]
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--help"],
+        capture_output=True, text=True, cwd=REPO)
+    if proc.returncode != 0:
+        return [f"flags: `serve --help` failed:\n{proc.stderr[-500:]}"]
+    actual = set(HELP_FLAG_RE.findall(proc.stdout)) - {"--help"}
+    documented = documented_flags(arch_md)
+    errors = []
+    for missing in sorted(actual - documented):
+        errors.append(f"flags: {missing} exists in launch/serve.py but is "
+                      "not documented in docs/ARCHITECTURE.md")
+    for stale in sorted(documented - actual):
+        errors.append(f"flags: {stale} documented in docs/ARCHITECTURE.md "
+                      "but launch/serve.py no longer exposes it")
+    print(f"  flags: {len(actual)} parser flags vs {len(documented)} "
+          "documented")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    print("check_docs: doctests")
+    errors += check_doctests()
+    print("check_docs: links")
+    errors += check_links()
+    print("check_docs: launch/serve.py flags table")
+    errors += check_flags_drift()
+    if errors:
+        print(f"\nFAIL ({len(errors)}):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("\nOK: docs checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
