@@ -17,12 +17,24 @@ the decode hot path:
     overhead of the gathered delta pipeline vs the base-only engine
     (paper's dual-pipeline claim: the base path is untouched, so the
     overhead is just the low-rank einsums + gather)
+  - paged KV cache: the int8/chunk8 engine on the block-paged pool
+    (decode reads through block tables) — tok/s parity with dense shows
+    the indirection is free on the decode path
+  - shared-prefix workload (``shared_prefix`` row): every request repeats
+    one long system prompt with a short unique tail; the paged engine
+    with prefix reuse prefills the shared head ONCE and only computes the
+    tails (``prefix_hit_tokens``), so its *effective prefill throughput*
+    (submitted prompt tokens / wall time inside prefill waves) must beat
+    the dense engine by >= 1.5x — the serving-level payoff of the paper's
+    computation-reuse principle
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
 
 CI runs --smoke on every push and uploads the JSON artifact, so the serving
-perf trajectory accumulates per-commit. Also exposes the harness-standard
-``run() -> [(name, us_per_call, derived)]`` used by benchmarks.run.
+perf trajectory accumulates per-commit (tools/check_bench.py gates tok/s
+regressions against benchmarks/serve_floors.json). Also exposes the
+harness-standard ``run() -> [(name, us_per_call, derived)]`` used by
+benchmarks.run.
 """
 
 from __future__ import annotations
@@ -31,20 +43,38 @@ import argparse
 import json
 import time
 
-SMOKE = dict(n_slots=2, max_len=64, requests=6, max_new=16,
-             prompt_lens=(8, 12, 31))
-FULL = dict(n_slots=4, max_len=256, requests=32, max_new=32,
-            prompt_lens=(8, 12, 31, 64, 96))
+import numpy as np
 
-# (label, quantize, decode_chunk, fuse_qkv, n_loras)
+SMOKE = dict(n_slots=2, max_len=64, requests=6, max_new=16,
+             prompt_lens=(8, 12, 31),
+             shared_prefix=dict(prefix_len=96, suffix_len=8, requests=6,
+                                max_new=8, max_len=128, kv_block_size=16))
+FULL = dict(n_slots=4, max_len=256, requests=32, max_new=32,
+            prompt_lens=(8, 12, 31, 64, 96),
+            shared_prefix=dict(prefix_len=192, suffix_len=16, requests=16,
+                               max_new=16, max_len=256, kv_block_size=16))
+
+# (label, quantize, decode_chunk, fuse_qkv, n_loras, paged)
 MODES = [
-    ("bf16/chunk1", False, 1, False, 0),
-    ("bf16/chunk8", False, 8, False, 0),
-    ("axllm-int8/chunk1", True, 1, False, 0),
-    ("axllm-int8/chunk8", True, 8, False, 0),
-    ("axllm-int8/chunk8/fused", True, 8, True, 0),
-    ("axllm-int8/chunk8/multi-lora", True, 8, False, 2),
+    ("bf16/chunk1", False, 1, False, 0, False),
+    ("bf16/chunk8", False, 8, False, 0, False),
+    ("axllm-int8/chunk1", True, 1, False, 0, False),
+    ("axllm-int8/chunk8", True, 8, False, 0, False),
+    ("axllm-int8/chunk8/fused", True, 8, True, 0, False),
+    ("axllm-int8/chunk8/multi-lora", True, 8, False, 2, False),
+    ("axllm-int8/chunk8/paged", True, 8, False, 0, True),
 ]
+
+TRAJECTORY_CAP = 50     # max per-run trajectory points kept in the JSON
+
+
+def _downsample(traj, cap: int = TRAJECTORY_CAP):
+    """Thin a per-step trajectory to <= cap evenly spaced points (first and
+    last kept) so BENCH_serve.json stays diff-reviewable."""
+    if len(traj) <= cap:
+        return traj
+    idx = np.linspace(0, len(traj) - 1, cap).round().astype(int)
+    return [traj[i] for i in dict.fromkeys(int(i) for i in idx)]
 
 
 def _build():
@@ -58,8 +88,7 @@ def _build():
 
 
 def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
-           fuse_qkv: bool, lora: int = 0):
-    import numpy as np
+           fuse_qkv: bool, lora: int = 0, paged: bool = False):
     from repro.serve.engine import ServeEngine
 
     if lora:
@@ -82,7 +111,8 @@ def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
         return ServeEngine(cfg, params, n_slots=p["n_slots"],
                            max_len=p["max_len"], quantize=quantize,
                            decode_chunk=decode_chunk, fuse_qkv=fuse_qkv,
-                           adapters=registry)
+                           adapters=registry, paged=paged,
+                           kv_block_size=16)
 
     # untimed warmup pass: the timed engine inherits the jitted
     # prefill-bucket/chunk-decode/writer callables, so the trajectory below
@@ -110,7 +140,53 @@ def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
         "generated_tokens": toks,
         "tokens_per_sec": round(toks / wall, 2) if wall else 0.0,
         "stats": eng.stats.as_dict(),
-        "trajectory": traj,
+        "trajectory": _downsample(traj),
+    }
+
+
+def _serve_shared_prefix(cfg, params, sp: dict, n_slots: int, paged: bool):
+    """Drive the shared-prefix workload (one long system prompt, short
+    unique tails) and report effective prefill throughput: submitted
+    prompt tokens per second of wall time spent inside prefill waves."""
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(1)
+    prefix = rng.integers(0, cfg.vocab_size, size=sp["prefix_len"])
+    prompts = [np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, size=sp["suffix_len"])])
+        .astype(np.int32) for _ in range(sp["requests"])]
+
+    def make():
+        return ServeEngine(cfg, params, n_slots=n_slots,
+                           max_len=sp["max_len"], quantize=True,
+                           decode_chunk=8, paged=paged,
+                           kv_block_size=sp["kv_block_size"])
+
+    warm = make()
+    for pr in prompts:
+        warm.submit(pr, max_new=sp["max_new"])
+    warm.run()
+    eng = make().adopt_compiled(warm)          # fresh engine, empty index
+    for pr in prompts:
+        eng.submit(pr, max_new=sp["max_new"])
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    prompt_tokens = sum(len(pr) for pr in prompts)
+    toks = sum(len(r.tokens) for r in eng.finished)
+    eff = prompt_tokens / st.prefill_wall_s if st.prefill_wall_s else 0.0
+    return {
+        "wall_s": round(wall, 4),
+        "generated_tokens": toks,
+        "tokens_per_sec": round(toks / wall, 2) if wall else 0.0,
+        "submitted_prompt_tokens": prompt_tokens,
+        "computed_prefill_tokens": st.prefill_tokens,
+        "prefill_wall_s": round(st.prefill_wall_s, 4),
+        "effective_prefill_tok_s": round(eff, 2),
+        "prefix_hit_tokens": st.prefix_hit_tokens,
+        "blocks_in_use": st.blocks_in_use,
+        "cow_copies": st.cow_copies,
     }
 
 
@@ -125,9 +201,9 @@ def bench(smoke: bool = True) -> dict:
         "modes": {},
         "decode_chunk_speedup": {},
     }
-    for label, quant, chunk, fuse, lora in MODES:
+    for label, quant, chunk, fuse, lora, paged in MODES:
         report["modes"][label] = _serve(cfg, params, p, quant, chunk, fuse,
-                                        lora=lora)
+                                        lora=lora, paged=paged)
     for base in ("bf16", "axllm-int8"):
         t1 = report["modes"][f"{base}/chunk1"]["tokens_per_sec"]
         t8 = report["modes"][f"{base}/chunk8"]["tokens_per_sec"]
@@ -142,6 +218,21 @@ def bench(smoke: bool = True) -> dict:
         "tokens_per_sec": t_lora,
         "base_tokens_per_sec": t_base,
         "overhead_vs_base": round(t_base / t_lora, 3) if t_lora else 0.0,
+    }
+    # shared-prefix workload: paged + prefix reuse vs dense on the same
+    # stream — the acceptance bar is >= 1.5x effective prefill throughput
+    sp = p["shared_prefix"]
+    dense_sp = _serve_shared_prefix(cfg, params, sp, p["n_slots"],
+                                    paged=False)
+    paged_sp = _serve_shared_prefix(cfg, params, sp, p["n_slots"],
+                                    paged=True)
+    e_d = dense_sp["effective_prefill_tok_s"]
+    e_p = paged_sp["effective_prefill_tok_s"]
+    report["shared_prefix"] = {
+        "workload": dict(sp),
+        "dense": dense_sp,
+        "paged": paged_sp,
+        "prefill_speedup": round(e_p / e_d, 2) if e_d else 0.0,
     }
     return report
 
@@ -160,6 +251,10 @@ def run():
     ml = rep["multi_lora"]
     rows.append(("serve/multi_lora/overhead", 0.0,
                  f"{ml['overhead_vs_base']}x vs base-only"))
+    sp = rep["shared_prefix"]
+    rows.append(("serve/shared_prefix/prefill_speedup", 0.0,
+                 f"{sp['prefill_speedup']}x eff-prefill; "
+                 f"hits={sp['paged']['prefix_hit_tokens']}"))
     return rows
 
 
@@ -184,6 +279,12 @@ def main(argv=None):
     ml = rep["multi_lora"]
     print(f"multi-LoRA (2 adapters) overhead vs base-only: "
           f"{ml['overhead_vs_base']}x tok/s")
+    sp = rep["shared_prefix"]
+    print(f"shared-prefix: paged effective prefill "
+          f"{sp['paged']['effective_prefill_tok_s']} tok/s vs dense "
+          f"{sp['dense']['effective_prefill_tok_s']} tok/s "
+          f"({sp['prefill_speedup']}x, "
+          f"{sp['paged']['prefix_hit_tokens']} prefix-hit tokens)")
     print(f"wrote {args.out}")
 
 

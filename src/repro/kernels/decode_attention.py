@@ -78,7 +78,11 @@ def decode_attention_pallas(q, k_cache, v_cache, length, *, k_scale=None,
     quantized = k_scale is not None
     bs = min(block_s, s)
     if s % bs:
-        raise ValueError(f"cache length {s} not divisible by block {bs}")
+        # non-power-of-two cache lengths (e.g. S=768 with block 512): fall
+        # back to the largest power-of-two block that divides S instead of
+        # refusing the launch — worst case one block spanning all of S
+        from repro.kernels.ops import _divisor_block
+        bs = _divisor_block(s, bs)
     n_s = s // bs
 
     qf = q.reshape(b * h, d)

@@ -159,8 +159,27 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 def decode_attention(q, k_cache, v_cache, length, *, k_scale=None,
-                     v_scale=None, impl: str = "auto") -> jax.Array:
-    """q: [B, H, d]; caches [B, S, Hk, d] (int8 if scales given); length [B]."""
+                     v_scale=None, block_tables=None,
+                     impl: str = "auto") -> jax.Array:
+    """q: [B, H, d]; caches [B, S, Hk, d] (int8 if scales given); length [B].
+
+    With ``block_tables`` ([B, MB] int32) the caches are a shared *paged
+    pool* [NB, bs, Hk, d] instead: each row's logical sequence is the
+    concatenation of its table's blocks, and the paged flash-decode kernel
+    gathers KV tiles through the table (scalar-prefetch index map) so
+    prefix-shared blocks stream from HBM once per referencing row without
+    ever being materialized contiguously.
+    """
+    if block_tables is not None:
+        if _use_pallas(impl):
+            from repro.kernels import paged_decode_attention as _pda
+            return _pda.paged_decode_attention_pallas(
+                q, k_cache, v_cache, block_tables, length,
+                k_scale=k_scale, v_scale=v_scale,
+                interpret=_interpret(impl))
+        return _ref.paged_decode_attention_ref(
+            q, k_cache, v_cache, block_tables, length,
+            k_scale=k_scale, v_scale=v_scale)
     if _use_pallas(impl):
         from repro.kernels import decode_attention as _da
         return _da.decode_attention_pallas(
@@ -168,6 +187,21 @@ def decode_attention(q, k_cache, v_cache, length, *, k_scale=None,
             interpret=_interpret(impl))
     return _ref.decode_attention_ref(q, k_cache, v_cache, length,
                                      k_scale=k_scale, v_scale=v_scale)
+
+
+def prefix_attention(q, k_prefix, v_prefix, prefix_len, k_suffix, v_suffix,
+                     *, impl: str = "auto") -> jax.Array:
+    """Suffix-prefill attention against a cached (right-padded) prefix.
+
+    q/k_suffix/v_suffix: [B, S, H|Hk, d]; k/v_prefix: [B, P, Hk, d] with
+    per-row valid lengths ``prefix_len`` [B]. Runs the jnp online-softmax
+    oracle on every backend for now — prefill waves are small and XLA
+    fuses this fine; the decode hot path is where the paged Pallas kernel
+    earns its keep. (A Pallas suffix-prefill kernel is a future lever.)
+    """
+    del impl
+    return _ref.prefix_attention_ref(q, k_prefix, v_prefix, prefix_len,
+                                     k_suffix, v_suffix)
 
 
 def quantize_channels(w, *, bits: int = 8, impl: str = "auto"):

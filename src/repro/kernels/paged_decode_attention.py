@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: single-token decode attention against a block-paged
+KV pool (flash-decode through a block table).
+
+The serving engine stores KV in fixed-size blocks inside a shared pool
+``[n_blocks, block, Hk, d]`` with per-slot block tables — the KV-side
+analogue of the paper's Result Cache: identical prompt prefixes map to the
+*same* physical blocks, so their KV is computed once and reused by every
+request that shares them (see repro/serve/paged_cache.py). This kernel is
+the dense flash-decode kernel of ``decode_attention.py`` generalized to
+gather its KV tiles through that indirection.
+
+Grid: (B*H, n_blocks_per_seq). The block table and the per-row valid
+lengths ride in as scalar-prefetch operands, so each KV tile's DMA source
+address is computed from ``block_tables[b, ib]`` *before* the kernel body
+runs (pltpu.PrefetchScalarGridSpec) — the gather costs no extra pass over
+HBM. Online-softmax state lives in VMEM scratch across the block dimension,
+exactly as in the dense kernel; int8-KV per-(position, head) scales stream
+through the same block-table index map.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref,
+                         vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                         scale: float, bs: int, n_b: int, h: int,
+                         quantized: bool):
+    bh = pl.program_id(0)
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                     # [1, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [bs, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, :, 0, :].astype(jnp.float32)     # [bs, 1] scales
+        v = v * vs_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # global key position of this tile: block ib holds positions
+    # [ib*bs, (ib+1)*bs) of the row's logical sequence, wherever the
+    # block table placed them in the pool
+    kpos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = kpos < len_ref[bh // h]   # scalar-prefetch refs are unblocked
+    vmask = valid.astype(jnp.float32)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[:1, :1]
+    l_prev = l_ref[:1, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new) * vmask
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ib == n_b - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[:1, :1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q, k_pool, v_pool, block_tables, length, *,
+                                  k_scale=None, v_scale=None,
+                                  interpret: bool = False):
+    """q: [B, H, d]; pools: [NB, bs, Hk, d]; block_tables: [B, MB] int32
+    (pool block id of each row's ib-th logical block); length: [B].
+    Returns [B, H, d]. Entries of the table beyond a row's valid length may
+    point anywhere in the pool (conventionally block 0, the trash block) —
+    the length mask keeps them out of the softmax.
+    """
+    b, h, d = q.shape
+    bs, hk = k_pool.shape[1], k_pool.shape[2]
+    mb = block_tables.shape[1]
+    rep = h // hk
+    quantized = k_scale is not None
+
+    qf = q.reshape(b * h, d)
+    if not quantized:
+        # dummy scale refs keep the kernel signature uniform (one trash
+        # block's worth per index — the map below pins them to block 0)
+        k_scale = jnp.ones((1, bs, hk, 1), jnp.float32)
+        v_scale = jnp.ones((1, bs, hk, 1), jnp.float32)
+
+    def kv_index(bh, ib, len_ref, bt_ref):
+        return (bt_ref[bh // h, ib], 0, (bh % h) // rep, 0)
+
+    def scale_index(bh, ib, len_ref, bt_ref):
+        if quantized:
+            return kv_index(bh, ib, len_ref, bt_ref)
+        return (0, 0, (bh % h) // rep, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # lengths + block table in SMEM
+        grid=(b * h, mb),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bh, ib, len_ref, bt_ref: (bh, 0)),
+            pl.BlockSpec((1, bs, 1, d), kv_index),
+            pl.BlockSpec((1, bs, 1, d), kv_index),
+            pl.BlockSpec((1, bs, 1, 1), scale_index),
+            pl.BlockSpec((1, bs, 1, 1), scale_index),
+        ],
+        out_specs=pl.BlockSpec((1, d),
+                               lambda bh, ib, len_ref, bt_ref: (bh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((8, 128), jnp.float32),
+            pltpu.VMEM((8, 128), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=1.0 / (d ** 0.5),
+                          bs=bs, n_b=mb, h=h, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        interpret=interpret,
+    )(length.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qf, k_pool, v_pool, k_scale, v_scale)
+    return out.reshape(b, h, d)

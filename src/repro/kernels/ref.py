@@ -100,12 +100,80 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         v_cache = v_cache.astype(jnp.float32) * v_scale
     out = attention_ref(q[:, None], k_cache, v_cache, causal=False,
                         bias=_length_bias(length, s, h))
-    return out[:, 0]
+    # length == 0 rows: every key is masked, so the softmax renormalizes a
+    # uniform distribution over garbage — force the exact-zero output the
+    # online-softmax kernels produce (l == 0 -> acc/max(l, eps) == 0)
+    return jnp.where(length[:, None, None] > 0, out[:, 0], 0.0) \
+        .astype(q.dtype)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               length: jax.Array,
+                               k_scale: Optional[jax.Array] = None,
+                               v_scale: Optional[jax.Array] = None
+                               ) -> jax.Array:
+    """Oracle for the block-paged decode kernel: gather each row's logical
+    KV sequence out of the shared pool through its block table, then run
+    the dense decode oracle.
+
+    q: [B, H, d]; pools: [NB, bs, Hk, d] (int8 codes if *_scale given,
+    scales [NB, bs, Hk, 1]); block_tables: [B, MB] int32; length: [B].
+    Table entries past a row's length may point anywhere (trash block 0 by
+    convention) — masked by `length` exactly like dense pad positions.
+    """
+    b = q.shape[0]
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    mb = block_tables.shape[1]
+
+    def gather(pool):
+        g = jnp.take(pool, block_tables, axis=0)       # [B, MB, bs, Hk, *]
+        return g.reshape(b, mb * bs, *pool.shape[2:])
+
+    return decode_attention_ref(
+        q, gather(k_pool), gather(v_pool), length,
+        k_scale=None if k_scale is None else gather(k_scale),
+        v_scale=None if v_scale is None else gather(v_scale))
 
 
 def _length_bias(length: jax.Array, s: int, h: int) -> jax.Array:
     mask = jnp.arange(s)[None, :] < length[:, None]          # [B, S]
     return jnp.where(mask, 0.0, -1e30)[:, None, None, :]     # [B, 1, 1, S]
+
+
+def prefix_attention_ref(q: jax.Array, k_prefix: jax.Array,
+                         v_prefix: jax.Array, prefix_len: jax.Array,
+                         k_suffix: jax.Array, v_suffix: jax.Array
+                         ) -> jax.Array:
+    """Suffix-only prefill attention against a cached prefix: query i of
+    row b sits at global position ``prefix_len[b] + i`` and attends every
+    valid prefix key (j < prefix_len[b]) plus the causal suffix keys
+    (j <= i). This is what lets prefix-cache hits skip recomputing their
+    shared prompt head — the prefill wave only runs the un-cached tail.
+
+    q: [B, S, H, d]; k/v_prefix: [B, P, Hk, d] (right-padded, per-row
+    valid length ``prefix_len`` [B]); k/v_suffix: [B, S, Hk, d].
+    Returns [B, S, H, d]. One joint f32 softmax over [prefix ++ suffix].
+    """
+    b, s, h, d = q.shape
+    p = k_prefix.shape[1]
+    n_rep = h // k_prefix.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32)
+    lp = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                    _repeat_kv(k_prefix, n_rep).astype(jnp.float32)) * scale
+    ls = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                    _repeat_kv(k_suffix, n_rep).astype(jnp.float32)) * scale
+    pmask = jnp.arange(p)[None, :] < prefix_len[:, None]       # [B, P]
+    lp = jnp.where(pmask[:, None, None, :], lp, -1e30)
+    smask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]   # causal [S,S]
+    ls = jnp.where(smask[None, None], ls, -1e30)
+    logits = jnp.concatenate([lp, ls], axis=-1)                # [B,H,S,P+S]
+    probs = jax.nn.softmax(logits, axis=-1)
+    vcat = jnp.concatenate([_repeat_kv(v_prefix, n_rep),
+                            _repeat_kv(v_suffix, n_rep)], axis=1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vcat.astype(jnp.float32))
+    return out.astype(q.dtype)
 
 
 # Analysis mode (set via kernels.ops.set_analysis_mode): unrolls the KV-chunk

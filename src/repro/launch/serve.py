@@ -9,6 +9,13 @@ through the continuous-batching engine.
 Flags of note:
   --decode-chunk N  on-device decode steps per dispatch (default cfg value,
                     8; 1 reproduces the per-token host round-trip loop)
+  --paged           serve through the block-paged KV pool with radix-tree
+                    prefix reuse (attention families; shared prompt heads
+                    prefill once — see --kv-block-size/--prefix-cache)
+  --kv-block-size N tokens per KV pool block (power of two, default 16)
+  --prefix-cache    radix prefix index on the paged pool (default on;
+                    --no-prefix-cache keeps paging but disables reuse)
+  --num-blocks N    KV pool size in blocks (default: 2x dense equivalent)
   --fuse-qkv        rewrite deployed params to fused wqkv/gate_up
                     projections (one activation pass per block)
   --eos-id N        per-slot stop token (overrides cfg.eos_id; -1 disables)
@@ -96,6 +103,18 @@ def main(argv=None):
                     default=None,
                     help="fused wqkv/gate_up projections (--no-fuse-qkv "
                          "overrides a config that enables them)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache with radix-tree prefix "
+                         "reuse (attention families only)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV pool block (power of two)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="radix prefix index on the paged pool (disable "
+                         "to page without reuse)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool blocks (default: 2x the dense-equivalent "
+                         "capacity plus trash and CoW spare)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop token id (-1: disable even if cfg sets one)")
     ap.add_argument("--long-prompt", choices=("truncate", "reject"),
@@ -156,7 +175,10 @@ def main(argv=None):
                       quantize=not args.no_quantize,
                       eos_id=eos_id, long_prompt=args.long_prompt,
                       decode_chunk=args.decode_chunk,
-                      fuse_qkv=args.fuse_qkv, adapters=registry)
+                      fuse_qkv=args.fuse_qkv, adapters=registry,
+                      paged=args.paged, kv_block_size=args.kv_block_size,
+                      num_blocks=args.num_blocks,
+                      prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -175,6 +197,12 @@ def main(argv=None):
     print(f"[{mode}] {len(reqs)} requests, {toks} tokens, "
           f"{toks/dt:.1f} tok/s, occupancy "
           f"{eng.stats.mean_occupancy:.2f}{lora_tag} (host fallback path)")
+    if args.paged:
+        print(f"  paged: {eng.stats.prefix_hit_tokens} prefix-hit tokens, "
+              f"{eng.stats.blocks_in_use} blocks cached, "
+              f"{eng.stats.cow_copies} CoW copies "
+              f"(block={args.kv_block_size}, "
+              f"prefix_cache={'on' if args.prefix_cache else 'off'})")
     for r in reqs[:3]:
         tag = " [truncated]" if r.truncated else ""
         ad = f" [{r.adapter}]" if r.adapter else ""

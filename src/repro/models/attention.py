@@ -136,6 +136,51 @@ def cache_spec(cfg):
     return spec
 
 
+def init_paged_cache(cfg, batch: int, n_blocks: int, block_size: int,
+                     max_blocks: int, dtype=jnp.bfloat16,
+                     n_layers: Optional[int] = None):
+    """Block-paged KV cache: one shared pool + per-slot block tables.
+
+    KV lives in ``n_blocks`` fixed-size blocks of ``block_size`` tokens in
+    a pool shared by every slot; each slot's logical sequence is the
+    concatenation of the blocks its row of ``block_tables`` names
+    (position p -> block ``table[p // block]``, offset ``p % block``).
+    Block 0 is the trash block: table entries past a row's allocation
+    point there, and out-of-range writes are routed to it — nothing ever
+    reads it (the length mask stops first). Ownership (free list,
+    refcounts, prefix index) is host-side state in
+    :class:`repro.serve.paged_cache.PagedKVCache`.
+    """
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    kv_dtype = jnp.int8 if cfg.quant_kv else dtype
+    cache = {
+        "k": jnp.zeros((nl, n_blocks, block_size, hk, hd), kv_dtype),
+        "v": jnp.zeros((nl, n_blocks, block_size, hk, hd), kv_dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "block_tables": jnp.zeros((batch, max_blocks), jnp.int32),
+    }
+    if cfg.quant_kv:
+        cache["k_scale"] = jnp.zeros((nl, n_blocks, block_size, hk, 1),
+                                     jnp.float32)
+        cache["v_scale"] = jnp.zeros((nl, n_blocks, block_size, hk, 1),
+                                     jnp.float32)
+    return cache
+
+
+def paged_cache_spec(cfg):
+    """Paged variant of :func:`cache_spec`: pool leaves name their *block*
+    axis (the allocation unit — there is no per-slot batch axis in the
+    pool), while ``pos`` / ``block_tables`` stay slot-leading (axis 0).
+    Mirrors :func:`init_paged_cache` leaf-for-leaf.
+    """
+    spec = {"k": 1, "v": 1, "pos": 0, "block_tables": 0}
+    if cfg.quant_kv:
+        spec["k_scale"] = 1
+        spec["v_scale"] = 1
+    return spec
+
+
 def _quantize_kv(x):
     """Per-(pos, head) int8 quantization of new KV entries."""
     s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8) / 127.0
@@ -169,7 +214,8 @@ def _wo_project(p, out, impl, adapters, adapter_idx, lora_scaling):
 
 def attention_prefill(p, x, cfg, layer_cache, *, impl: str = "auto",
                       adapters=None, adapter_idx=None,
-                      lora_scaling: float = 1.0):
+                      lora_scaling: float = 1.0, prefix=None,
+                      prefix_len=None):
     """Full-seq attention that also fills this layer's cache slice.
 
     layer_cache: {"k": [B, S_max, Hk, hd], ...} (no leading L — the scan
@@ -178,14 +224,33 @@ def attention_prefill(p, x, cfg, layer_cache, *, impl: str = "auto",
     ``adapters``: this layer's stacked-adapter slice ``{target:
     {"lora_a": [max_loras, n_in, r], "lora_b": [max_loras, r, n_out]}}``;
     ``adapter_idx``: [B] int32 per-row adapter selection (-1 = base).
+
+    ``prefix``/``prefix_len``: suffix-only prefill against a cached prompt
+    head (the prefix-reuse path). ``prefix`` is this layer's gathered
+    prefix KV ``{"k"/"v": [B, P, Hk, hd]}`` (int8 codes + ``k_scale``/
+    ``v_scale`` [B, P, Hk, 1] when cfg.quant_kv), right-padded with
+    per-row valid lengths ``prefix_len`` [B]. Rows are position-offset by
+    their prefix length (RoPE and masking), queries attend the valid
+    prefix plus the causal suffix, and only the suffix KV is written to
+    ``layer_cache`` — the prefix already lives in the shared pool.
     """
     b, s, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if prefix is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    else:
+        positions = prefix_len[:, None] + jnp.arange(s)[None, :]
     q, k, v = _project_qkv(p, x, cfg, impl, adapters, adapter_idx,
                            lora_scaling)
     q = L.rope(q, positions, cfg.rope_theta)
     k = L.rope(k, positions, cfg.rope_theta)
-    out = ops.flash_attention(q, k, v, causal=True, impl=impl)
+    if prefix is None:
+        out = ops.flash_attention(q, k, v, causal=True, impl=impl)
+    else:
+        kp, vp = prefix["k"], prefix["v"]
+        if cfg.quant_kv:      # pool holds int8 codes + per-position scales
+            kp = kp.astype(jnp.float32) * prefix["k_scale"]
+            vp = vp.astype(jnp.float32) * prefix["v_scale"]
+        out = ops.prefix_attention(q, kp, vp, prefix_len, k, v, impl=impl)
     out = out.reshape(b, s, -1)
     new_cache = dict(layer_cache)
     if cfg.quant_kv:
@@ -228,6 +293,61 @@ def _seq_shard_ctx(cfg, batch: int, cache_len: int):
     batch_axes = () if b_entry is None else (
         (b_entry,) if isinstance(b_entry, str) else tuple(b_entry))
     return mesh, seq_axes, batch_axes
+
+
+def attention_decode_paged(p, x, cfg, layer_pool, pos, block_tables, *,
+                           impl: str = "auto", adapters=None,
+                           adapter_idx=None, lora_scaling: float = 1.0):
+    """One-token decode through a block-paged KV pool.
+
+    x: [B, 1, d]; pos: [B] current positions; layer_pool: this layer's
+    pool slice ``{"k"/"v": [NB, bs, Hk, hd], ...}``; block_tables:
+    [B, MB] int32. The new KV entry is written at
+    ``(table[pos // bs], pos % bs)`` — the scheduler guarantees the
+    written block is uniquely owned (copy-on-write resolves sharing
+    before the chunk dispatches), and rows whose position ran past their
+    table (stopped slots riding through a scan) are routed to trash
+    block 0. Attention reads gather through the table in the paged
+    flash-decode kernel. ``adapters``/``adapter_idx`` as in
+    :func:`attention_prefill`.
+    """
+    b = x.shape[0]
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    bs = layer_pool["k"].shape[1]
+    mb = block_tables.shape[1]
+    q, k, v = _project_qkv(p, x, cfg, impl, adapters, adapter_idx,
+                           lora_scaling)             # [B, 1, ...]
+    q = L.rope(q, pos[:, None], cfg.rope_theta)
+    k = L.rope(k, pos[:, None], cfg.rope_theta)
+
+    bidx_row = jnp.arange(b)
+    blk = pos // bs
+    in_range = blk < mb
+    bid = jnp.where(in_range,
+                    block_tables[bidx_row, jnp.clip(blk, 0, mb - 1)], 0)
+    off = jnp.where(in_range, pos % bs, 0)
+    pool = dict(layer_pool)
+    if cfg.quant_kv:
+        kq, ksc = _quantize_kv(k)
+        vq, vsc = _quantize_kv(v)
+        pool["k"] = layer_pool["k"].at[bid, off].set(kq[:, 0])
+        pool["v"] = layer_pool["v"].at[bid, off].set(vq[:, 0])
+        pool["k_scale"] = layer_pool["k_scale"].at[bid, off].set(ksc[:, 0])
+        pool["v_scale"] = layer_pool["v_scale"].at[bid, off].set(vsc[:, 0])
+        out = ops.decode_attention(
+            q[:, 0], pool["k"], pool["v"], pos + 1,
+            k_scale=pool["k_scale"], v_scale=pool["v_scale"],
+            block_tables=block_tables, impl=impl)
+    else:
+        pool["k"] = layer_pool["k"].at[bid, off].set(
+            k[:, 0].astype(layer_pool["k"].dtype))
+        pool["v"] = layer_pool["v"].at[bid, off].set(
+            v[:, 0].astype(layer_pool["v"].dtype))
+        out = ops.decode_attention(q[:, 0], pool["k"], pool["v"], pos + 1,
+                                   block_tables=block_tables, impl=impl)
+    out = out.reshape(b, 1, h * hd)
+    return _wo_project(p, out, impl, adapters, adapter_idx,
+                       lora_scaling), pool
 
 
 def attention_decode(p, x, cfg, layer_cache, pos, *, impl: str = "auto",

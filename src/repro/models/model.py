@@ -40,6 +40,13 @@ class ModelAPI:
     decode: Callable[..., Any]
     cache_spec: Any = None           # batch axis per init_cache leaf
     ragged_prefill: bool = False     # prefill(lengths=...) supported
+    # block-paged KV cache (serve-engine paged mode): pool + block-table
+    # constructor and its leaf spec (block axis for pool leaves, slot axis
+    # for pos/block_tables). None for recurrent/enc-dec families — their
+    # state folding has no per-position cache to page, so the engine
+    # rejects paged=True for them with a clear error.
+    init_paged_cache: Optional[Callable[..., Any]] = None
+    paged_cache_spec: Any = None
     # deploy-time fused-projection rewrite (wqkv / gate_up); apply AFTER
     # deploy_quantize. None when the family has no fusable projections.
     fuse_params: Optional[Callable[[Any], Any]] = None
@@ -62,16 +69,20 @@ def get_model(cfg: ModelConfig, impl: str = "auto") -> ModelAPI:
             init_cache=lambda batch, max_len: mod.init_cache(
                 cfg, batch, max_len),
             prefill=lambda p, b, c, lengths=None, adapters=None,
-            adapter_idx=None, lora_scaling=1.0: mod.prefill(
+            adapter_idx=None, lora_scaling=1.0, prefix=None: mod.prefill(
                 p, b["tokens"], cfg, c, impl=impl, lengths=lengths,
                 adapters=adapters, adapter_idx=adapter_idx,
-                lora_scaling=lora_scaling),
+                lora_scaling=lora_scaling, prefix=prefix),
             decode=lambda p, t, c, adapters=None, adapter_idx=None,
             lora_scaling=1.0: mod.decode_step(
                 p, t, cfg, c, impl=impl, adapters=adapters,
                 adapter_idx=adapter_idx, lora_scaling=lora_scaling),
             cache_spec=mod.cache_spec(cfg),
             ragged_prefill=True,
+            init_paged_cache=lambda batch, n_blocks, block_size,
+            max_blocks: mod.init_paged_cache(
+                cfg, batch, n_blocks, block_size, max_blocks),
+            paged_cache_spec=mod.paged_cache_spec(cfg),
             fuse_params=lambda p: mod.fuse_params(p, cfg),
             supports_lora=True,
         )

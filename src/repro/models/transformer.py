@@ -125,12 +125,31 @@ def cache_spec(cfg):
     return A.cache_spec(cfg)
 
 
+def init_paged_cache(cfg, batch: int, n_blocks: int, block_size: int,
+                     max_blocks: int, dtype=None):
+    """Block-paged KV pool + per-slot tables (attention.init_paged_cache)."""
+    dtype = dtype or (jnp.bfloat16 if cfg.dtype == "bfloat16"
+                      else jnp.float32)
+    return A.init_paged_cache(cfg, batch, n_blocks, block_size, max_blocks,
+                              dtype)
+
+
+def paged_cache_spec(cfg):
+    """Block/slot axis per paged-cache leaf (attention.paged_cache_spec)."""
+    return A.paged_cache_spec(cfg)
+
+
+# host-side per-slot leaves excluded from the layer scan's xs
+_SLOT_LEAVES = ("pos", "block_tables")
+
+
 def _cache_xs(cache):
-    return {k: v for k, v in cache.items() if k != "pos"}
+    return {k: v for k, v in cache.items() if k not in _SLOT_LEAVES}
 
 
 def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None,
-            adapters=None, adapter_idx=None, lora_scaling: float = 1.0):
+            adapters=None, adapter_idx=None, lora_scaling: float = 1.0,
+            prefix=None):
     """tokens: [B, S] -> (last-position logits [B, V], filled cache).
 
     With `lengths` ([B] int32, ragged right-padded prompts), logits are
@@ -145,25 +164,43 @@ def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None,
     ([B] int32, -1 = base-only) enable the multi-LoRA delta pipeline:
     the stacked per-layer adapter slices scan together with the layer
     params, and each attention block adds its gathered per-row delta.
+
+    ``prefix`` (requires ``lengths``) makes this a *suffix-only* prefill
+    against an already-cached prompt head: ``{"k"/"v":
+    [L, B, P, Hk, hd]`` (+ ``k_scale``/``v_scale`` when cfg.quant_kv),
+    ``"len": [B]}``. ``tokens``/``lengths`` then describe only the
+    un-cached tail; every row is position-offset by its prefix length and
+    the cursor lands at ``prefix_len + lengths``. The returned cache
+    holds suffix KV only — the prefix stays wherever it was cached.
     """
     b, s = tokens.shape
     x = L.embed_fwd(params["embed"], tokens).astype(_param_dtype(cfg))
+    prefix_len = None
+    prefix_kv = None
+    if prefix is not None:
+        if lengths is None:
+            raise ValueError("prefix-reuse prefill needs per-row lengths")
+        prefix_len = jnp.asarray(prefix["len"], jnp.int32)
+        prefix_kv = {k: v for k, v in prefix.items() if k != "len"}
 
     def body(carry, inp):
-        if adapters is None:
-            (lp, lc), ad = inp, None
-        else:
-            lp, lc, ad = inp
+        inp = list(inp)
+        lp, lc = inp[0], inp[1]
+        pf = inp[2] if prefix_kv is not None else None
+        ad = inp[-1] if adapters is not None else None
         h = L.norm_fwd(lp["ln1"], carry, cfg.norm_eps)
         att, new_lc = A.attention_prefill(
             lp["attn"], h, cfg, lc, impl=impl, adapters=ad,
-            adapter_idx=adapter_idx, lora_scaling=lora_scaling)
+            adapter_idx=adapter_idx, lora_scaling=lora_scaling,
+            prefix=pf, prefix_len=prefix_len)
         x1 = carry + att
         h2 = L.norm_fwd(lp["ln2"], x1, cfg.norm_eps)
         x2 = x1 + _ffn_fwd(lp["ffn"], h2, cfg, impl)
         return shard(x2, "batch", "seq"), new_lc
 
     xs = (params["layers"], _cache_xs(cache))
+    if prefix_kv is not None:
+        xs = xs + (prefix_kv,)
     if adapters is not None:
         xs = xs + (adapters,)
     x, new_kv = L.maybe_scan(body, x, xs, cfg.scan_layers)
@@ -176,7 +213,7 @@ def prefill(params, tokens, cfg, cache, impl: str = "auto", lengths=None,
     x = L.norm_fwd(params["final_norm"], x, cfg.norm_eps)
     logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
     new_cache = dict(new_kv)
-    new_cache["pos"] = pos
+    new_cache["pos"] = pos if prefix_len is None else pos + prefix_len
     return logits, new_cache
 
 
@@ -187,8 +224,14 @@ def decode_step(params, token, cfg, cache, impl: str = "auto",
     ``adapters``/``adapter_idx``/``lora_scaling`` as in :func:`prefill` —
     the same stacked-adapter slices scan with the layers so a mixed batch
     of base and N distinct adapters decodes in one dispatch.
+
+    A cache carrying ``block_tables`` (built by :func:`init_paged_cache`)
+    routes every layer through the block-paged decode path: KV writes land
+    at ``(table[pos // bs], pos % bs)`` in the shared pool and attention
+    gathers through the table (``ops.decode_attention(block_tables=)``).
     """
     pos = cache["pos"]
+    block_tables = cache.get("block_tables")
     x = L.embed_fwd(params["embed"], token[:, None]).astype(_param_dtype(cfg))
 
     def body(carry, inp):
@@ -197,9 +240,15 @@ def decode_step(params, token, cfg, cache, impl: str = "auto",
         else:
             lp, lc, ad = inp
         h = L.norm_fwd(lp["ln1"], carry, cfg.norm_eps)
-        att, new_lc = A.attention_decode(
-            lp["attn"], h, cfg, lc, pos, impl=impl, adapters=ad,
-            adapter_idx=adapter_idx, lora_scaling=lora_scaling)
+        if block_tables is not None:
+            att, new_lc = A.attention_decode_paged(
+                lp["attn"], h, cfg, lc, pos, block_tables, impl=impl,
+                adapters=ad, adapter_idx=adapter_idx,
+                lora_scaling=lora_scaling)
+        else:
+            att, new_lc = A.attention_decode(
+                lp["attn"], h, cfg, lc, pos, impl=impl, adapters=ad,
+                adapter_idx=adapter_idx, lora_scaling=lora_scaling)
         x1 = carry + att
         h2 = L.norm_fwd(lp["ln2"], x1, cfg.norm_eps)
         x2 = x1 + _ffn_fwd(lp["ffn"], h2, cfg, impl)
@@ -213,4 +262,6 @@ def decode_step(params, token, cfg, cache, impl: str = "auto",
     logits = L.head_fwd(params["embed"], x, cfg, impl=impl)[:, 0]
     new_cache = dict(new_kv)
     new_cache["pos"] = pos + 1
+    if block_tables is not None:
+        new_cache["block_tables"] = block_tables
     return logits, new_cache

@@ -64,10 +64,33 @@ Scheduler contract
   rewrites, no per-adapter engine. The stacked A/B tensors are jit
   *arguments*, so hot `add`/`evict` between waves reuses every compile.
   Recurrent families reject registries at engine init.
+- **Paged KV cache + prefix reuse (`paged=True`).** Attention families
+  can swap the dense per-slot `[n_slots, max_len]` cache for a shared
+  block pool `[n_layers, num_blocks, kv_block_size]` with per-slot block
+  tables (`repro.serve.paged_cache.PagedKVCache` owns the free list,
+  refcounts and radix prefix index; `repro.models.attention` owns the
+  device layout). `submit()` prompts are matched against the radix index
+  at admission: the longest cached *full-block* prefix is taken by
+  reference (refcount++) and prefill runs only on the un-cached suffix —
+  rows position-offset by their hit, one joint softmax over
+  [gathered prefix ‖ suffix] (`ops.prefix_attention`). Decode reads KV
+  through the block table in the paged flash-decode kernel and writes to
+  uniquely owned blocks (copy-on-write resolves sharing at chunk
+  boundaries, batched into one device copy — a defensive invariant:
+  current flows keep written blocks unshared by construction, so
+  `cow_copies` stays 0 until a sharing mode like forked sampling lands).
+  Finished requests publish
+  their full blocks back into the index; when the pool runs dry, LRU
+  index-only blocks are evicted. This extends the paper's
+  computation-reuse principle from weight products to whole KV rows:
+  shared system prompts / few-shot templates prefill once, not per
+  request. Paged decode is token-identical to the dense path
+  (tests/test_paged.py). Recurrent families reject `paged=True`.
 - **Stats.** `engine.stats` tracks admitted/finished/truncated requests,
-  decode steps/tokens, prefill waves/tokens/compiles, LoRA-carrying
-  requests and mean slot occupancy; `stats.as_dict()` feeds
-  `benchmarks/serve_bench.py`.
+  decode steps/tokens, prefill waves/tokens/compiles (plus wall time),
+  LoRA-carrying requests, mean slot occupancy and — in paged mode —
+  `prefix_hit_tokens` / `blocks_in_use` / `cow_copies`;
+  `stats.as_dict()` feeds `benchmarks/serve_bench.py`.
 
 `generate()` returns token lists for all submitted prompts; requests
 still in flight when `max_steps` runs out come back with their partial
@@ -77,6 +100,8 @@ tokens and `truncated=True` (`return_requests=True` exposes the flags).
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 from typing import List, Optional
 
 import numpy as np
@@ -89,6 +114,7 @@ from repro.core.quantization import QuantConfig
 from repro.models.model import ModelAPI, get_model
 from repro.serve.adapters import AdapterRegistry
 from repro.serve.decode import decode_steps
+from repro.serve.paged_cache import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -121,8 +147,15 @@ class EngineStats:
     prefill_waves: int = 0
     prefill_tokens: int = 0
     prefill_compiles: int = 0
+    prefill_wall_s: float = 0.0       # host wall time inside prefill waves
     lora_requests: int = 0            # admitted requests carrying an adapter
     occupancy_sum: float = 0.0        # sum over steps of active/n_slots
+    # paged-KV mode (prefix reuse): prompt tokens whose KV came from the
+    # radix index instead of being recomputed, live pool blocks, and
+    # copy-on-write block copies performed before decode chunks
+    prefix_hit_tokens: int = 0
+    blocks_in_use: int = 0
+    cow_copies: int = 0
 
     @property
     def mean_occupancy(self) -> float:
@@ -181,6 +214,14 @@ class ServeEngine:
     ``long_prompt`` / ``max_len`` define the stop conditions (see the
     module docstring for the full scheduler contract).
 
+    ``paged=True`` swaps the dense per-slot cache for the block-paged
+    pool with radix-tree prefix reuse: ``kv_block_size`` tokens per
+    block (power of two), ``num_blocks`` pool blocks (default
+    ``2 * n_slots * ceil(max_len / kv_block_size) + 2`` — a full dense
+    equivalent per slot, the trash block, a copy-on-write spare, and as
+    much again for retained prefixes), ``prefix_cache=False`` keeps the
+    paging but disables the radix index.
+
     Serve with ``submit(prompt, max_new, adapter=...)`` + ``step()`` /
     ``run()``, or the one-shot ``generate(prompts, ...)``.
     """
@@ -192,7 +233,10 @@ class ServeEngine:
                  long_prompt: str = "truncate",
                  decode_chunk: Optional[int] = None,
                  fuse_qkv: Optional[bool] = None,
-                 adapters: Optional[AdapterRegistry] = None):
+                 adapters: Optional[AdapterRegistry] = None,
+                 paged: bool = False, kv_block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "ServeEngine drives token-only prefill; encoder-decoder "
@@ -231,7 +275,32 @@ class ServeEngine:
         # through every prefill wave and decode chunk as a [B] jit argument.
         self.adapter_slots = np.full((n_slots,), -1, np.int32)
         self.rng = jax.random.PRNGKey(seed)
-        self.cache = self.api.init_cache(n_slots, max_len)
+        self.paged = paged
+        self.kv_block_size = kv_block_size
+        self.prefix_cache = prefix_cache
+        if paged:
+            if self.api.init_paged_cache is None:
+                raise ValueError(
+                    f"family {cfg.family!r} has no paged KV cache path: "
+                    "recurrent/enc-dec state folding exposes no "
+                    "per-position KV to page — serve it with paged=False "
+                    "(attention families only)")
+            self.max_blocks = math.ceil(max_len / kv_block_size)
+            self.num_blocks = num_blocks if num_blocks is not None \
+                else 2 * n_slots * self.max_blocks + 2
+            self.pager = PagedKVCache(
+                n_slots=n_slots, n_blocks=self.num_blocks,
+                block_size=kv_block_size,
+                max_blocks_per_slot=self.max_blocks,
+                prefix_cache=prefix_cache)
+            self.cache = self.api.init_paged_cache(
+                n_slots, self.num_blocks, kv_block_size, self.max_blocks)
+            self._pool_leaves = [
+                k for k, ax in self.api.paged_cache_spec.items() if ax == 1]
+            self._copier = jax.jit(self._copy_blocks, donate_argnums=(0,))
+        else:
+            self.pager = None
+            self.cache = self.api.init_cache(n_slots, max_len)
         self._validate_cache_spec()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
@@ -245,6 +314,20 @@ class ServeEngine:
                                 static_argnames=("greedy", "vocab_size"))
 
     def _validate_cache_spec(self):
+        if self.paged:
+            spec = self.api.paged_cache_spec
+            # pool leaves carry the block axis (shared, no batch dim);
+            # pos/block_tables stay slot-leading
+            for name, ax in spec.items():
+                want = self.num_blocks if ax == 1 else self.n_slots
+                got = self.cache[name].shape[ax]
+                if got != want:
+                    raise ValueError(
+                        f"paged_cache_spec says axis {ax} of {name!r} is "
+                        f"the {'block' if ax == 1 else 'slot'} axis but "
+                        f"shape {self.cache[name].shape} has {got} != "
+                        f"{want} there")
+            return
         spec = self.api.cache_spec
         if spec is None:
             raise ValueError("ModelAPI.cache_spec missing: the engine needs "
@@ -259,6 +342,14 @@ class ServeEngine:
             return leaf
 
         jax.tree_util.tree_map(check, self.cache, spec)
+
+    def _copy_blocks(self, cache, src, dst):
+        """Copy pool blocks ``src`` onto ``dst`` on every pool leaf — the
+        device half of copy-on-write (one batched dispatch per chunk)."""
+        new = dict(cache)
+        for name in self._pool_leaves:
+            new[name] = cache[name].at[:, dst].set(cache[name][:, src])
+        return new
 
     def _validate_adapters(self, reg: AdapterRegistry):
         """Adapter-aware deployment validation: the family must expose the
@@ -333,8 +424,15 @@ class ServeEngine:
             for r in take:
                 by_len.setdefault(len(r.prompt), []).append(r)
             groups = list(by_len.values())
+        t0 = time.perf_counter()
         for group in groups:
-            self._prefill_group(group, free)
+            if self.paged:
+                self._prefill_group_paged(group, free)
+            else:
+                self._prefill_group(group, free)
+        jax.block_until_ready(self.cache["k"] if "k" in self.cache
+                              else jax.tree_util.tree_leaves(self.cache)[0])
+        self.stats.prefill_wall_s += time.perf_counter() - t0
 
     def _get_prefill(self, wave_bucket: int, padded_len: int):
         """Jitted prefill for one (wave, padded_len) bucket. With an
@@ -418,6 +516,131 @@ class ServeEngine:
             return full.at[idx].set(vals.astype(full.dtype))
         return jax.tree_util.tree_map(put, cache, wave_cache,
                                       self.api.cache_spec)
+
+    # -- paged prefill (block pool + prefix reuse) -----------------------------
+    def _get_paged_prefill(self, wave_bucket: int, padded_len: int,
+                           n_prefix_blocks: int):
+        """Jitted paged prefill for one (wave, suffix_pad, prefix_blocks)
+        bucket: gather the rows' cached prefix KV out of the pool through
+        their prefix block tables, run the suffix-only prefill wave, and
+        scatter the new suffix KV into the rows' freshly allocated blocks
+        — one dispatch, pool donated. ``n_prefix_blocks == 0`` is the
+        no-hit fast path (no gather, plain ragged prefill)."""
+        key = ("paged", wave_bucket, padded_len, n_prefix_blocks)
+        if key not in self._prefill_cache:
+            api, bs = self.api, self.kv_block_size
+            quant_kv = self.cfg.quant_kv
+            pool_leaves = self._pool_leaves
+            n_suffix_blocks = padded_len // bs
+            lora = self.registry is not None
+            scaling = self.registry.scaling if lora else None
+
+            def fn(cache, params, toks, lengths, prefix_len, pbt, sbt,
+                   stacked=None, aidx=None):
+                wave = api.init_cache(toks.shape[0], padded_len)
+                kw = {"lengths": lengths}
+                if n_prefix_blocks:
+                    def gather(name):
+                        g = jnp.take(cache[name], pbt, axis=1)
+                        return g.reshape(g.shape[0], g.shape[1],
+                                         n_prefix_blocks * bs, *g.shape[4:])
+                    prefix = {"k": gather("k"), "v": gather("v"),
+                              "len": prefix_len}
+                    if quant_kv:
+                        prefix["k_scale"] = gather("k_scale")
+                        prefix["v_scale"] = gather("v_scale")
+                    kw["prefix"] = prefix
+                if lora:
+                    kw.update(adapters=stacked, adapter_idx=aidx,
+                              lora_scaling=scaling)
+                logits, wave_cache = api.prefill(params, {"tokens": toks},
+                                                 wave, **kw)
+                new_cache = dict(cache)
+                for name in pool_leaves:
+                    w = wave_cache[name]          # [L, wb, pl, hk, x]
+                    w = w.reshape(w.shape[0], w.shape[1], n_suffix_blocks,
+                                  bs, *w.shape[3:])
+                    new_cache[name] = cache[name].at[:, sbt].set(
+                        w.astype(cache[name].dtype))
+                return logits, new_cache
+
+            self._prefill_cache[key] = jax.jit(fn, donate_argnums=(0,))
+            self.stats.prefill_compiles += 1
+        return self._prefill_cache[key]
+
+    def _prefill_group_paged(self, group: List[Request], free: List[int]):
+        """Admit one wave through the paged pool: match each prompt's
+        longest cached full-block prefix in the radix index, allocate
+        blocks for the un-cached suffix, prefill ONLY the suffix (rows
+        position-offset by their hit), and publish the prompt's full
+        blocks back into the index so later requests reuse them."""
+        pgr, bs = self.pager, self.kv_block_size
+        w = len(group)
+        wb = _pow2_bucket(w, 1, self.n_slots)
+        slots_for = free[:w]            # slots are assigned up front: block
+        hits, hit_toks = [], []         # ownership needs a table to live in
+        for r, slot in zip(group, slots_for):
+            # LoRA requests bypass the prefix index: adapters targeting
+            # wk/wv make the KV adapter-specific, so sharing it across
+            # adapters (or with the base model) would be silently wrong
+            hit, ht = pgr.match(r.prompt) if r.adapter is None else ([], 0)
+            pgr.acquire_blocks(slot, hit)        # before any alloc can evict
+            for _ in range(math.ceil((len(r.prompt) - ht) / bs)):
+                pgr.append_block(slot)
+            hits.append(hit)
+            hit_toks.append(ht)
+        max_ctx = self.max_blocks * bs
+        pl = _pow2_bucket(max(len(r.prompt) - ht
+                              for r, ht in zip(group, hit_toks)),
+                          bs, max_ctx)
+        npb_max = max((len(h) for h in hits), default=0)
+        npb = _pow2_bucket(npb_max, 1, self.max_blocks) if npb_max else 0
+        toks = np.zeros((wb, pl), np.int32)
+        lengths = np.ones((wb,), np.int32)
+        prefix_len = np.zeros((wb,), np.int32)
+        pbt = np.zeros((wb, max(npb, 1)), np.int32)
+        sbt = np.zeros((wb, pl // bs), np.int32)
+        aidx = np.full((wb,), -1, np.int32)
+        for i, (r, slot) in enumerate(zip(group, slots_for)):
+            suffix = r.prompt[hit_toks[i]:]
+            toks[i, : len(suffix)] = suffix
+            lengths[i] = len(suffix)
+            prefix_len[i] = hit_toks[i]
+            nh = len(hits[i])
+            pbt[i, :nh] = hits[i]
+            nsb = math.ceil(len(suffix) / bs)
+            sbt[i, :nsb] = pgr.tables[slot, nh: nh + nsb]
+            if r.adapter is not None:
+                aidx[i] = self.registry.index_of(r.adapter)
+        fn = self._get_paged_prefill(wb, pl, npb)
+        args = [self.cache, self.params, jnp.asarray(toks),
+                jnp.asarray(lengths), jnp.asarray(prefix_len),
+                jnp.asarray(pbt), jnp.asarray(sbt)]
+        if self.registry is not None:
+            args += [self.registry.stacked, jnp.asarray(aidx)]
+        logits, self.cache = fn(*args)
+        first = self._sample(logits)
+        for i, (r, slot) in enumerate(zip(group, slots_for)):
+            r.tokens.append(int(first[i]))
+            self.stats.admitted += 1
+            self.stats.prefill_tokens += int(lengths[i])
+            self.stats.prefix_hit_tokens += hit_toks[i]
+            if r.adapter is not None:
+                self.stats.lora_requests += 1
+            # publish the prompt's full blocks now: requests in later waves
+            # reuse this prefill while the slot is still decoding (base
+            # model only — LoRA KV is adapter-specific, see above)
+            if r.adapter is None:
+                pgr.insert(r.prompt, pgr.slot_blocks(slot))
+            if self._stop_reason(r) is not None:
+                pgr.release_slot(slot)
+                self._finish(r)           # EOS/max_new on the first token
+                continue
+            self.slots[slot] = r
+            self.adapter_slots[slot] = aidx[i]
+            free.remove(slot)
+        self.stats.prefill_waves += 1
+        self.stats.blocks_in_use = pgr.blocks_in_use
 
     # -- sampling --------------------------------------------------------------
     def _sample(self, logits):
@@ -518,6 +741,31 @@ class ServeEngine:
             remaining = max(remaining, rem)
         n = max(1, min(self.decode_chunk, remaining,
                        max_n if max_n is not None else remaining))
+        if self.paged:
+            # make every active slot's write window [pos, pos+n) backed by
+            # uniquely owned blocks: append fresh blocks past the table end
+            # and copy-on-write any shared block, in ONE batched device copy
+            cow = []
+            pos_host = np.zeros((self.n_slots,), np.int32)
+            for i in active:
+                r = self.slots[i]
+                pos0 = len(r.prompt) + len(r.tokens) - 1
+                pos_host[i] = pos0
+                rem = min(r.max_new - len(r.tokens), self.max_len - pos0)
+                cow += self.pager.prepare_decode(i, pos0,
+                                                 max(1, min(n, rem)))
+            if cow:
+                # pad to a power-of-two count (trash onto trash) so the
+                # jitted copier compiles once per bucket, not per count
+                pad = _pow2_bucket(len(cow), 1, 1 << 30) - len(cow)
+                pairs = cow + [(0, 0)] * pad
+                src = jnp.asarray([c[0] for c in pairs], jnp.int32)
+                dst = jnp.asarray([c[1] for c in pairs], jnp.int32)
+                self.cache = self._copier(self.cache, src, dst)
+                self.stats.cow_copies += len(cow)
+            self.cache["pos"] = jnp.asarray(pos_host)
+            self.cache["block_tables"] = jnp.asarray(self.pager.tables)
+            self.stats.blocks_in_use = self.pager.blocks_in_use
         fn = self._get_chunk_fn(n)
         if self.registry is not None:
             out = fn(self.params, self.registry.stacked,
@@ -542,9 +790,22 @@ class ServeEngine:
                     break
                 r.tokens.append(int(toks[t, i]))
             if self._stop_reason(r) is not None:
+                if self.paged:
+                    # publish the generated tokens' full blocks too (KV at
+                    # position p is keyed by prompt ++ tokens[:-1], the
+                    # sequence actually fed), then drop the slot's refs —
+                    # indexed blocks stay cached for future requests.
+                    # LoRA rows stay unindexed (adapter-specific KV).
+                    if r.adapter is None:
+                        seq = np.concatenate(
+                            [r.prompt, np.asarray(r.tokens[:-1], np.int32)])
+                        self.pager.insert(seq, self.pager.slot_blocks(i))
+                    self.pager.release_slot(i)
                 self._finish(r)
                 self.slots[i] = None
                 self.adapter_slots[i] = -1
+        if self.paged:
+            self.stats.blocks_in_use = self.pager.blocks_in_use
         return True
 
     def run(self, max_steps: int = 10000):
@@ -564,14 +825,20 @@ class ServeEngine:
         engines are rejected rather than silently decoding wrong tokens."""
         mine = (self.cfg, self.eos_id, self.max_len, self.greedy,
                 self.n_slots, self.registry is None,
-                None if self.registry is None else self.registry.scaling)
+                None if self.registry is None else self.registry.scaling,
+                self.paged,
+                self.kv_block_size if self.paged else None,
+                getattr(self, "num_blocks", None) if self.paged else None)
         theirs = (other.cfg, other.eos_id, other.max_len, other.greedy,
                   other.n_slots, other.registry is None,
-                  None if other.registry is None else other.registry.scaling)
+                  None if other.registry is None else other.registry.scaling,
+                  other.paged,
+                  other.kv_block_size if other.paged else None,
+                  getattr(other, "num_blocks", None) if other.paged else None)
         if mine != theirs:
             raise ValueError(
                 "adopt_compiled: engines differ in (cfg, eos_id, max_len, "
-                f"greedy, n_slots): {mine} vs {theirs}")
+                f"greedy, n_slots, paged layout): {mine} vs {theirs}")
         self._chunk_fns = other._chunk_fns
         self._prefill_cache = other._prefill_cache
         self._writer = other._writer
@@ -622,6 +889,8 @@ class ServeEngine:
             if s is not None and s.rid == rid:
                 self.slots[i] = None
                 self.adapter_slots[i] = -1
+                if self.paged:
+                    self.pager.release_slot(i)
                 if s.adapter is not None:
                     self.registry.release(s.adapter)
                 s.truncated = True

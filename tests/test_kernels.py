@@ -121,6 +121,32 @@ def test_pick_blocks_per_group_alignment():
     assert bk % 128 == 0 and 640 % bk == 0
 
 
+@pytest.mark.parametrize("k,gs", [(384, 128), (1536, 512), (96, 32)])
+def test_pick_blocks_per_group_k_not_multiple_of_gs_bk(k, gs):
+    """k a non-power-of-two multiple of the group size (e.g. 3 groups):
+    the group-aligned bk must still divide k exactly — the naive
+    (bk // gs) * gs of a power-of-two bk does not."""
+    bm, bk, bn, pad_m = ops.pick_blocks(16, k, 256, group_size=gs,
+                                        per_group=True)
+    assert bk % gs == 0 and k % bk == 0
+    assert pad_m == 0
+
+
+def test_pick_blocks_skinny_m8_with_per_group():
+    """The skinny-decode fast path and per-group alignment compose: m=8
+    keeps the no-pad bm=8 row and the widened bn, while bk snaps to the
+    group grid."""
+    bm, bk, bn, pad_m = ops.pick_blocks(8, 512, 1024, group_size=128,
+                                        per_group=True)
+    assert bm == 8 and pad_m == 0
+    assert bn == 512                        # skinny launch widens N tiles
+    assert bk % 128 == 0 and 512 % bk == 0
+    # odd skinny m with per_group still pads up to the bm=8 row
+    bm, bk, bn, pad_m = ops.pick_blocks(9, 512, 1024, group_size=128,
+                                        per_group=True)
+    assert bm == 8 and pad_m == 7 and bk % 128 == 0
+
+
 @pytest.mark.parametrize("m", [8, 24, 48])
 def test_axllm_matmul_no_pad_shapes_interpret(m):
     """The no-pad decode shapes produce correct results end to end."""
@@ -231,6 +257,41 @@ def test_decode_attention_int8_kv():
     rel = np.abs(np.asarray(o_ref) - np.asarray(o_exact)).max() \
         / np.abs(np.asarray(o_exact)).max()
     assert rel < 0.05
+
+
+def test_decode_attention_int8_kv_length_zero_rows():
+    """length == 0 rows (empty slots riding through a batched decode) must
+    come back as exact zeros on both paths — a fully masked softmax must
+    not renormalize into a uniform average of garbage."""
+    rng = np.random.default_rng(9)
+    b, s, h, hk, d = 3, 512, 8, 2, 64
+    q = _rand(rng, (b, h, d))
+    kq, ks = _kv_quant(_rand(rng, (b, s, hk, d)))
+    vq, vs = _kv_quant(_rand(rng, (b, s, hk, d)))
+    length = jnp.asarray([0, 130, 0], jnp.int32)
+    o_ref = ref.decode_attention_ref(q, kq, vq, length, k_scale=ks,
+                                     v_scale=vs)
+    o_pal = ops.decode_attention(q, kq, vq, length, k_scale=ks, v_scale=vs,
+                                 impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    assert np.allclose(np.asarray(o_ref)[[0, 2]], 0.0)
+    assert np.allclose(np.asarray(o_pal)[[0, 2]], 0.0)
+
+
+def test_decode_attention_non_divisible_cache_length():
+    """S=768 with the default 512 block used to raise; the kernel now
+    falls back to the largest power-of-two divisor block."""
+    rng = np.random.default_rng(10)
+    b, s, h, hk, d = 2, 768, 4, 2, 64
+    q = _rand(rng, (b, h, d))
+    kc = _rand(rng, (b, s, hk, d))
+    vc = _rand(rng, (b, s, hk, d))
+    length = jnp.asarray([700, 768], jnp.int32)
+    o_ref = ref.decode_attention_ref(q, kc, vc, length)
+    o_pal = ops.decode_attention(q, kc, vc, length, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

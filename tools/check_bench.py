@@ -1,0 +1,83 @@
+"""Bench regression gate for CI: fresh serve throughput vs checked-in floors.
+
+Compares the ``tokens_per_sec`` of the base decode modes in a freshly
+written ``BENCH_serve.json`` against ``benchmarks/serve_floors.json`` and
+fails when a mode regresses more than ``GRACE`` (20%) below its floor.
+Floors are deliberately conservative (roughly a quarter of a warm local
+run) because CI runners are slower and noisier than dev machines — the
+gate exists to catch structural regressions (a dispatch sneaking back into
+the decode hot loop, a donation lost, an accidental recompile per step),
+not single-digit jitter. The shared-prefix prefill speedup is gated as a
+*ratio*, which is machine-independent.
+
+Run:  PYTHONPATH=src python tools/check_bench.py [BENCH_serve.json]
+
+Updating floors: when a legitimate change moves steady-state throughput,
+re-run ``benchmarks/serve_bench.py --smoke`` locally and set each floor to
+roughly a quarter of the new local tok/s (keep the ratio floors as-is
+unless the workload itself changed).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FLOORS = REPO / "benchmarks" / "serve_floors.json"
+GRACE = 0.20          # allowed shortfall below a floor before failing
+
+
+def check(bench_path: pathlib.Path) -> list:
+    floors = json.loads(FLOORS.read_text())
+    fresh = json.loads(bench_path.read_text())
+    errors = []
+    for mode, floor in floors["tokens_per_sec"].items():
+        row = fresh.get("modes", {}).get(mode)
+        if row is None:
+            errors.append(f"mode {mode!r} has a floor but is missing from "
+                          f"{bench_path.name}")
+            continue
+        got = row["tokens_per_sec"]
+        bar = floor * (1.0 - GRACE)
+        verdict = "OK" if got >= bar else "FAIL"
+        print(f"  {mode}: {got:.1f} tok/s vs floor {floor} "
+              f"(bar {bar:.1f}) {verdict}")
+        if got < bar:
+            errors.append(f"{mode}: {got:.1f} tok/s is >20% below the "
+                          f"checked-in floor {floor}")
+    for name, floor in floors.get("ratios", {}).items():
+        got = fresh
+        for key in name.split("."):
+            got = got.get(key, {}) if isinstance(got, dict) else {}
+        if not isinstance(got, (int, float)):
+            errors.append(f"ratio {name!r} missing from {bench_path.name}")
+            continue
+        verdict = "OK" if got >= floor else "FAIL"
+        print(f"  {name}: {got} vs floor {floor} {verdict}")
+        if got < floor:
+            errors.append(f"{name}: {got} fell below its floor {floor}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    bench = pathlib.Path(argv[0]) if argv else REPO / "BENCH_serve.json"
+    if not bench.exists():
+        print(f"check_bench: {bench} not found — run "
+              "benchmarks/serve_bench.py --smoke first")
+        return 1
+    print(f"check_bench: {bench.name} vs {FLOORS.relative_to(REPO)}")
+    errors = check(bench)
+    if errors:
+        print(f"\nFAIL ({len(errors)}):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("\nOK: serve throughput at or above floors")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
