@@ -1,14 +1,44 @@
 """Shared helpers for the benchmark harness. Every bench module exposes
-run() -> list[(name, us_per_call, derived)] rows; benchmarks.run prints the
-combined CSV. Simulated-cycle benches report cycles/1000 as us_per_call
-(1 GHz clock, paper §IV timing)."""
+run() -> list of rows; benchmarks.run prints the combined CSV and persists
+them to BENCH_kernel.json. Simulated-cycle benches report cycles/1000 as
+us_per_call (1 GHz clock, paper §IV timing).
+
+A row is either the legacy 3-tuple ``(name, value, derived)`` or — via
+:func:`row` — a 4-tuple whose last element is a provenance dict
+``{"impl", "backend", "units"}``. Provenance exists because a value alone
+is ambiguous: a CPU ``impl="ref"`` timing is not comparable to a TPU Pallas
+timing of the same op, and a reuse *rate* is not a microsecond.
+``tools/check_bench.py`` only compares rows whose provenance matches."""
 
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple, Union
 
-Row = Tuple[str, float, str]
+Meta = dict
+Row = Union[Tuple[str, float, str], Tuple[str, float, str, Meta]]
+
+
+def backend() -> str:
+    """The live jax backend name ("cpu" / "tpu" / ...)."""
+    import jax
+    return jax.default_backend()
+
+
+def row(name: str, value: float, derived: str, *, impl: str,
+        units: str = "us_per_call", backend_name: Optional[str] = None
+        ) -> Row:
+    """A bench row with provenance: which impl produced ``value``, on what
+    backend, in what units. ``impl`` is the kernels.ops dispatch string
+    ("ref", "pallas_interpret", ...) or "jnp"/"sim" for non-ops code."""
+    return (name, value, derived,
+            {"impl": impl, "backend": backend_name or backend(),
+             "units": units})
+
+
+def row_meta(r: Row) -> Meta:
+    """Provenance of a row; {} for legacy 3-tuples."""
+    return r[3] if len(r) > 3 else {}
 
 
 def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

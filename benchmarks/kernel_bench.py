@@ -2,8 +2,13 @@
 Pallas kernels target TPU and are validated in interpret mode). Measures the
 byte-traffic effect of the AxLLM representation (int8/int4 vs bf16 matmul),
 the fused-QKV projection vs three separate matmuls, chunked scan-decode vs
-the per-token dispatch loop, and sweeps the decode-shape block table
-(validating every (bm, bk, bn) choice in Pallas interpret mode).
+the per-token dispatch loop, sweeps the decode-shape block table
+(validating every (bm, bk, bn) choice in Pallas interpret mode), and
+records the predicted-vs-achieved computation-reuse rows (simulator
+analytic vs the reuse kernel's own multiply counter — see _reuse_rows).
+Every row carries {impl, backend, units} provenance (benchmarks.common.row)
+so tools/check_bench.py never compares a CPU ref timing against a Pallas
+kernel result.
 
 benchmarks/run.py persists these rows to BENCH_kernel.json at the repo root
 so the kernel perf trajectory accumulates per-commit."""
@@ -14,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, timeit
+from benchmarks.common import Row, row, timeit
 from repro.core.quantization import QuantConfig, qconcat, quantize
 from repro.kernels import ops
 
@@ -35,11 +40,14 @@ def _matmul_rows(rows, rng):
     bytes_fp = k * n * 4
     bytes_q8 = k * n + n * 4
     bytes_q4 = k * n // 2 + n * 4
-    rows.append(("kernel/matmul_f32", t_fp, f"weight_bytes={bytes_fp}"))
-    rows.append(("kernel/matmul_axllm_int8", t_q8,
-                 f"weight_bytes={bytes_q8} ({bytes_fp/bytes_q8:.1f}x less)"))
-    rows.append(("kernel/matmul_axllm_int4", t_q4,
-                 f"weight_bytes={bytes_q4} ({bytes_fp/bytes_q4:.1f}x less)"))
+    rows.append(row("kernel/matmul_f32", t_fp,
+                    f"weight_bytes={bytes_fp}", impl="jnp"))
+    rows.append(row("kernel/matmul_axllm_int8", t_q8,
+                    f"weight_bytes={bytes_q8} ({bytes_fp/bytes_q8:.1f}x "
+                    f"less)", impl="ref"))
+    rows.append(row("kernel/matmul_axllm_int4", t_q4,
+                    f"weight_bytes={bytes_q4} ({bytes_fp/bytes_q4:.1f}x "
+                    f"less)", impl="ref"))
 
 
 def _fused_qkv_rows(rows, rng):
@@ -64,9 +72,11 @@ def _fused_qkv_rows(rows, rng):
     f1 = jax.jit(lambda a, q: ops.axllm_matmul(a, q, impl="ref"))
     t3 = timeit(f3, x, wq, wk, wv)
     t1 = timeit(f1, x, wqkv)
-    rows.append(("kernel/qkv_3matmuls", t3, "3 launches; 3 codebook loads"))
-    rows.append(("kernel/qkv_fused", t1,
-                 f"1 launch; {t3/max(t1, 1e-9):.2f}x vs separate"))
+    rows.append(row("kernel/qkv_3matmuls", t3,
+                    "3 launches; 3 codebook loads", impl="ref"))
+    rows.append(row("kernel/qkv_fused", t1,
+                    f"1 launch; {t3/max(t1, 1e-9):.2f}x vs separate",
+                    impl="ref"))
 
 
 def _chunked_decode_rows(rows):
@@ -107,10 +117,11 @@ def _chunked_decode_rows(rows):
     rng = jax.random.PRNGKey(0)
     t_loop = timeit(per_token, params, last, cache) / steps
     t_scan = timeit(chunk, params, last, cache, rng) / steps
-    rows.append(("kernel/decode_per_token", t_loop,
-                 f"{steps} dispatches + host sampling"))
-    rows.append(("kernel/decode_chunked_scan", t_scan,
-                 f"1 dispatch; {t_loop/max(t_scan, 1e-9):.2f}x vs per-token"))
+    rows.append(row("kernel/decode_per_token", t_loop,
+                    f"{steps} dispatches + host sampling", impl="auto"))
+    rows.append(row("kernel/decode_chunked_scan", t_scan,
+                    f"1 dispatch; {t_loop/max(t_scan, 1e-9):.2f}x vs "
+                    f"per-token", impl="auto"))
 
 
 def _block_table_rows(rows, rng):
@@ -131,9 +142,60 @@ def _block_table_rows(rows, rng):
         if 8 <= m < 128 and m % 8 == 0:
             assert pad_m == 0, f"m={m} should hit the no-pad fast path"
         t = timeit(jax.jit(lambda a: ops.axllm_matmul(a, w, impl="ref")), x)
-        rows.append((f"kernel/blocks_m{m}", t,
-                     f"bm={bm};bk={bk};bn={bn};pad_m={pad_m};"
-                     f"interpret=ok"))
+        rows.append(row(f"kernel/blocks_m{m}", t,
+                        f"bm={bm};bk={bk};bn={bn};pad_m={pad_m};"
+                        f"interpret=ok", impl="ref"))
+
+
+def _reuse_rows(rows, rng):
+    """Predicted vs achieved computation reuse (paper §III.b) — the first
+    place the simulator's model and the kernel's measurement meet.
+
+    *Predicted* is ``core.reuse.reuse_rate`` on the quantized codes at the
+    kernel's own column-segment width (the same analytic that feeds the
+    Fig. 8 table and ``simulator.simulate_matrix``). *Achieved* is
+    ``1 - mults / (K*N)`` where ``mults`` is the multiply count the reuse
+    kernel itself tallies while running in interpret mode — distinct
+    alphabet cells per (k-row, bn segment). The two are computed by
+    disjoint code paths (numpy bincount vs in-kernel one-hot reduction)
+    and must agree to |diff| <= 1e-6 (gated in
+    benchmarks/kernel_floors.json at 0.01 for runner safety). Also times
+    the reuse jnp oracle against the multiply-dequant ref like-for-like
+    (same backend/units; impl differs by construction)."""
+    from repro.core.reuse import rc_alphabet, reuse_rate
+
+    m, k, n = 8, 1024, 1024
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    for bits, mode in ((8, "affine"), (4, "codebook")):
+        tag = f"{mode}{bits}"
+        qt = quantize(w, QuantConfig(bits, mode, "per_channel"))
+        levels, fold = rc_alphabet(bits, mode)
+        _, _, bn, _ = ops.pick_blocks(m, k, n, reuse_levels=len(levels))
+        # pass the QTensor, not qt.codes: int4 codes are packed two-per-
+        # byte and the analytics must see decoded signed codes
+        predicted = reuse_rate(qt, segment=bn, fold_sign=fold)
+        _, mults = ops.reuse_matmul(x, qt, impl="reuse_interpret",
+                                    with_stats=True)
+        achieved = 1.0 - int(mults) / (k * n)
+        rows.append(row(f"kernel/reuse_predicted_{tag}", predicted,
+                        f"segment={bn};fold_sign={fold}", impl="sim",
+                        units="reuse_rate"))
+        rows.append(row(f"kernel/reuse_achieved_{tag}", achieved,
+                        f"mults={int(mults)}/{k*n}; "
+                        f"|pred-ach|={abs(predicted-achieved):.2e}",
+                        impl="reuse_interpret", units="reuse_rate"))
+
+    qt8 = quantize(w, QuantConfig(8, "affine", "per_channel"))
+    f_mul = jax.jit(lambda a, q: ops.axllm_matmul(a, q, impl="ref"))
+    f_reu = jax.jit(lambda a, q: ops.axllm_matmul(a, q, impl="reuse_ref"))
+    t_mul = timeit(f_mul, x, qt8)
+    t_reu = timeit(f_reu, x, qt8)
+    rows.append(row("kernel/matmul_multiply_ref_int8", t_mul,
+                    "dequant+MAC every code", impl="ref"))
+    rows.append(row("kernel/matmul_reuse_ref_int8", t_reu,
+                    "LUT build + gather (XLA oracle of the reuse kernel)",
+                    impl="reuse_ref"))
 
 
 def run() -> list:
@@ -143,6 +205,7 @@ def run() -> list:
     _fused_qkv_rows(rows, rng)
     _chunked_decode_rows(rows)
     _block_table_rows(rows, rng)
+    _reuse_rows(rows, rng)
 
     # decode attention: bf16 KV vs int8 KV (bytes halve)
     b, s, h, hk, d = 4, 8192, 8, 2, 128
@@ -158,8 +221,9 @@ def run() -> list:
         q_, k_, v_, l_, k_scale=ks_, v_scale=vs_, impl="ref"))
     t1 = timeit(f_fp, q, kc, vc, length)
     t2 = timeit(f_q, q, kq, vq, length, sc, sc)
-    rows.append(("kernel/decode_attn_f32kv", t1,
-                 f"kv_bytes={2*b*s*hk*d*4}"))
-    rows.append(("kernel/decode_attn_int8kv", t2,
-                 f"kv_bytes={2*b*s*hk*(d+4)} (≈4x less than f32)"))
+    rows.append(row("kernel/decode_attn_f32kv", t1,
+                    f"kv_bytes={2*b*s*hk*d*4}", impl="ref"))
+    rows.append(row("kernel/decode_attn_int8kv", t2,
+                    f"kv_bytes={2*b*s*hk*(d+4)} (≈4x less than f32)",
+                    impl="ref"))
     return rows

@@ -62,8 +62,16 @@ def main() -> None:
             report["errors"][name] = f"{type(e).__name__}: {e}"
             continue
         report["errors"].pop(name, None)
+        # 4th element (when present) is the provenance dict from
+        # benchmarks.common.row — persisted so check_bench can refuse to
+        # compare rows of different impl/backend/units
         report["rows"][name] = [
-            [r[0], round(float(r[1]), 2), str(r[2])] for r in rows]
+            [r[0],
+             round(float(r[1]),
+                   2 if len(r) < 4 or r[3].get("units") == "us_per_call"
+                   else 6),
+             str(r[2])] + list(r[3:4])
+            for r in rows]
         for r in rows:
             derived = str(r[2]).replace(",", ";")
             print(f"{r[0]},{r[1]:.2f},{derived}")

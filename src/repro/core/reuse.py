@@ -29,9 +29,72 @@ def _as_numpy_codes(codes) -> np.ndarray:
 
 
 def fold_codes(codes, fold_sign: bool = True) -> np.ndarray:
-    """Map codes to RC cell indices (|code| under sign folding)."""
+    """Map codes to RC cell indices (|code| under sign folding).
+
+    ``fold_sign=True`` is only meaningful for sign-symmetric alphabets
+    (affine mode, where ``value(code) == -value(-code)``): it merges a code
+    and its negative into one RC cell. Non-uniform codebooks (NF4) are NOT
+    sign-symmetric — folding them would merge codes whose table values
+    differ — so codebook-mode consumers must pass ``fold_sign=False``; use
+    :func:`rc_alphabet` to get the correct fold for a quant mode. The
+    unfolded branch offsets by 128 (the most negative int8 code) so every
+    int4/int8 code lands in [0, 256) regardless of bit width; cell counts
+    are what matter here, and the offset is injective for any code width
+    up to 8 bits.
+    """
     c = _as_numpy_codes(codes).astype(np.int32)
-    return np.abs(c) if fold_sign else c + 128
+    out = np.abs(c) if fold_sign else c + 128
+    # legit folded cells top out at |−128| = 128; unfolded at −128..127+128
+    hi = 128 if fold_sign else 255
+    if out.size and (out.min() < 0 or out.max() > hi):
+        # signed codes can never land here; packed-int4 bytes (uint8, two
+        # nibbles per entry) read as 0..255 and overflow either mapping —
+        # a real bug this guard caught in kernel_bench
+        raise ValueError(
+            f"codes map outside the RC cell range [0, {hi}] — raw "
+            "packed-int4 bytes? pass the QTensor (or decode_codes) so "
+            "nibbles are unpacked and sign-extended first")
+    return out
+
+
+def rc_alphabet(bits: int, mode: str):
+    """The (levels, fold_sign) contract shared by the analytics, the cycle
+    simulator and the reuse (LUT) matmul kernel.
+
+    Returns ``(levels, fold_sign)`` where ``levels`` is the f32 value table
+    the reuse kernel's product LUT is built over — one product per
+    activation element per level — and ``fold_sign`` says whether a code
+    ``c`` indexes the table as ``|c|`` (with the sign applied on read, the
+    paper's 128-cell RC for 8-bit) or as ``c + 2**(bits-1)``.
+
+    * affine: levels are the magnitude ramp ``[0 .. qmax]`` (the per-channel
+      ``scale/qmax`` factor is applied outside the table, exactly like the
+      multiply kernel), folded — ``2**(bits-1)`` RC cells.
+    * codebook: levels are the explicit ``2**bits``-entry codebook (NF4 for
+      4-bit, identity for 8-bit), unfolded — NF4 is not sign-symmetric and
+      the identity table's ``-128`` entry has no positive mirror.
+
+    The cell *counts* produced by this mapping match
+    :func:`segment_unique_counts` / :func:`fold_codes` with the same
+    ``fold_sign`` (both mappings are injective on the live code range),
+    which is what lets the kernel's measured multiply count be compared
+    against the simulator's prediction (pinned by
+    tests/test_reuse_kernel.py).
+    """
+    import jax
+
+    from repro.core.quantization import identity_codebook, nf4_codebook
+    if mode == "affine":
+        qmax = (1 << (bits - 1)) - 1
+        return np.arange(qmax + 1, dtype=np.float32), True
+    if mode != "codebook":
+        raise ValueError(f"unknown quant mode {mode!r}")
+    # the codebook builders use jnp ops; force concrete evaluation so the
+    # alphabet stays host-side numpy even when called under a jit trace
+    # (the serve decode hot path reaches here through ops.reuse_matmul)
+    with jax.ensure_compile_time_eval():
+        cb = nf4_codebook() if bits == 4 else identity_codebook(8)
+    return np.asarray(cb, np.float32), False
 
 
 def segment_unique_counts(codes, segment: Optional[int] = 256,

@@ -4,6 +4,17 @@ Every op takes `impl` in {"auto", "pallas", "ref", "pallas_interpret"}:
   auto             -> pallas on TPU backends, ref otherwise (CPU dry-run path)
   pallas_interpret -> pallas kernel body executed in Python (tests on CPU)
 
+The quantized matmul additionally accepts the reuse (LUT) impls
+{"reuse", "reuse_interpret", "reuse_ref"}, which route through the
+codebook-LUT kernel of :mod:`repro.kernels.reuse_matmul` (gather instead of
+multiply for repeated codes — the paper's Result Cache on device):
+  reuse            -> reuse kernel on TPU, reuse jnp oracle otherwise
+  reuse_interpret  -> reuse kernel body executed in Python (tests on CPU)
+  reuse_ref        -> reuse jnp oracle (same product association, jit-safe)
+Non-matmul ops treat "reuse" as "auto" and the other two as "ref" — the
+reuse mode changes how quantized weights are multiplied, not how attention
+or KV quantization dispatch.
+
 The wrapper layer owns all shape plumbing the kernels require: scale-semantics
 normalization (affine kernels consume scale/qmax), padding M to block
 multiples, and flattening leading batch dims.
@@ -20,6 +31,7 @@ import jax.numpy as jnp
 from repro.core.quantization import QTensor
 from repro.kernels import ref as _ref
 from repro.kernels import axllm_matmul as _amm
+from repro.kernels import reuse_matmul as _rmm
 
 
 def set_analysis_mode(on: bool) -> None:
@@ -30,6 +42,21 @@ def set_analysis_mode(on: bool) -> None:
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+REUSE_IMPLS = ("reuse", "reuse_interpret", "reuse_ref")
+
+
+def _base_impl(impl: str) -> str:
+    """What non-matmul ops see: reuse modes only redirect the quantized
+    matmul, so "reuse" degrades to "auto" and the interpret/ref variants to
+    the oracle path (interpreting every attention kernel alongside a
+    reuse-matmul test would add wall time without covering anything new)."""
+    if impl == "reuse":
+        return "auto"
+    if impl in ("reuse_interpret", "reuse_ref"):
+        return "ref"
+    return impl
 
 
 def _use_pallas(impl: str) -> bool:
@@ -71,7 +98,7 @@ def _divisor_block(dim: int, target: int) -> int:
 
 
 def pick_blocks(m: int, k: int, n: int, group_size: int = 128,
-                per_group: bool = False):
+                per_group: bool = False, reuse_levels: Optional[int] = None):
     """Block-size table for the fused dequant-matmul: (bm, bk, bn, pad_m).
 
     The pad decision is part of the table: decode shapes (m < 128) pick the
@@ -82,10 +109,18 @@ def pick_blocks(m: int, k: int, n: int, group_size: int = 128,
     per-tile VMEM footprint stays far under budget because the x tile
     shrinks with bm.
 
+    ``reuse_levels`` switches to the reuse (LUT) kernel's table: its
+    per-tile product table and one-hot selector scale with the alphabet
+    size L, so bk is capped at ``REUSE_BK_LEVELS / L`` (per_group tiles
+    floor at one group — their selector tile may exceed the soft budget,
+    which the docstring of reuse_matmul.py accepts explicitly).
+
     >>> pick_blocks(16, 128, 256)       # skinny decode shape: no pad
     (16, 128, 256, 0)
     >>> pick_blocks(9, 128, 256)        # odd m falls back to bm=8 + pad
     (8, 128, 256, 7)
+    >>> pick_blocks(16, 512, 256, reuse_levels=128)   # LUT: bk capped at 64
+    (16, 64, 256, 0)
     """
     if m >= 128:
         bm = 128
@@ -93,6 +128,10 @@ def pick_blocks(m: int, k: int, n: int, group_size: int = 128,
         bm = next((b for b in _amm.SKINNY_BM if m % b == 0), 8)
     bk = _divisor_block(k, 512)
     bn = _divisor_block(n, 512 if bm <= 32 else 256)
+    if reuse_levels:
+        from repro.kernels.reuse_matmul import REUSE_BK_LEVELS
+        bk = _divisor_block(k, max(REUSE_BK_LEVELS // reuse_levels, 8))
+        bn = _divisor_block(n, 256)
     if per_group:
         g_bk = (bk // group_size) * group_size
         if g_bk <= 0 or k % g_bk:
@@ -103,8 +142,16 @@ def pick_blocks(m: int, k: int, n: int, group_size: int = 128,
 
 def axllm_matmul(x: jax.Array, qt: QTensor, *, impl: str = "auto",
                  out_dtype=None) -> jax.Array:
-    """y = x @ deq(qt). x: [..., K]; qt: [K, N]. Returns [..., N]."""
+    """y = x @ deq(qt). x: [..., K]; qt: [K, N]. Returns [..., N].
+
+    ``impl`` in ``REUSE_IMPLS`` routes through the reuse (LUT) kernel —
+    same result, gather-instead-of-multiply arithmetic (see
+    :func:`reuse_matmul` for the stats-bearing entry point).
+    """
     out_dtype = out_dtype or x.dtype
+    if impl in REUSE_IMPLS:
+        y, _ = reuse_matmul(x, qt, impl=impl, out_dtype=out_dtype)
+        return y
     if not _use_pallas(impl):
         lead = x.shape[:-1]
         y = _ref.axllm_matmul_ref(x.reshape(-1, x.shape[-1]), qt, out_dtype)
@@ -129,6 +176,56 @@ def axllm_matmul(x: jax.Array, qt: QTensor, *, impl: str = "auto",
     return y.reshape(*lead, n).astype(out_dtype)
 
 
+def reuse_matmul(x: jax.Array, qt: QTensor, *, impl: str = "auto",
+                 out_dtype=None, with_stats: bool = False):
+    """Reuse (LUT) matmul: ``(y, mults)`` = x @ deq(qt) by gathering cached
+    alphabet products instead of multiplying every code (paper §III.b).
+
+    x: [..., K]; qt: [K, N]. ``y`` is [..., N]. ``mults`` is the
+    *per-activation-row* multiply count — the distinct alphabet cells per
+    (k-row, bn-wide column segment), summed — i.e. what a Result Cache
+    executes for ONE input row; the baseline pays K*N. It is
+    activation-independent, so the achieved multiply-reduction is
+    ``1 - mults / (K * N)`` regardless of the batch. ``mults`` is a traced
+    int32 scalar on the kernel paths and a host int on the ref path;
+    ``with_stats=False`` (the serving default) returns ``mults=None`` —
+    the ref-path count needs concrete codes and must stay out of jit.
+
+    impl: "auto"/"reuse" -> kernel on TPU, jnp oracle otherwise;
+    "reuse_interpret"/"pallas_interpret" -> kernel body in Python;
+    "reuse_ref"/"ref" -> jnp oracle; "pallas" -> kernel.
+    """
+    from repro.core.reuse import rc_alphabet
+    out_dtype = out_dtype or x.dtype
+    kdim, n = qt.shape[-2], qt.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    levels, fold = rc_alphabet(qt.bits, qt.mode)
+    per_group = qt.granularity == "per_group"
+    bm, bk, bn, pad_m = pick_blocks(m, kdim, n, qt.group_size, per_group,
+                                    reuse_levels=len(levels))
+
+    use_kernel = impl in ("pallas", "pallas_interpret", "reuse_interpret") \
+        or (impl in ("auto", "reuse") and _on_tpu())
+    if not use_kernel:
+        y = _ref.reuse_matmul_ref(x2, qt, jnp.float32)
+        mults = _ref.reuse_mult_count(qt, bn) if with_stats else None
+        return y.reshape(*lead, n).astype(out_dtype), mults
+
+    interpret = impl in ("pallas_interpret", "reuse_interpret")
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+    y, counts = _rmm.reuse_matmul_pallas(
+        x2, qt.codes, _kernel_scale(qt), jnp.asarray(levels),
+        packed=qt.packed, fold_sign=fold, group_size=qt.group_size,
+        blocks=(bm, bk, bn), interpret=interpret)
+    if pad_m:
+        y = y[:m]
+    mults = counts[0, 0] if with_stats else None
+    return y.reshape(*lead, n).astype(out_dtype), mults
+
+
 def lora_matmul(x: jax.Array, qt: QTensor, a: jax.Array, b: jax.Array,
                 scaling: float, *, impl: str = "auto",
                 out_dtype=None) -> jax.Array:
@@ -147,6 +244,7 @@ def lora_matmul(x: jax.Array, qt: QTensor, a: jax.Array, b: jax.Array,
 def flash_attention(q, k, v, *, causal: bool = True,
                     impl: str = "auto") -> jax.Array:
     """q: [B, Sq, H, d]; k, v: [B, Sk, Hk, d] -> [B, Sq, H, d]."""
+    impl = _base_impl(impl)
     if _use_pallas(impl):
         from repro.kernels import flash_attention as _fa
         return _fa.flash_attention_pallas(
@@ -170,6 +268,7 @@ def decode_attention(q, k_cache, v_cache, length, *, k_scale=None,
     prefix-shared blocks stream from HBM once per referencing row without
     ever being materialized contiguously.
     """
+    impl = _base_impl(impl)
     if block_tables is not None:
         if _use_pallas(impl):
             from repro.kernels import paged_decode_attention as _pda
@@ -194,12 +293,22 @@ def prefix_attention(q, k_prefix, v_prefix, prefix_len, k_suffix, v_suffix,
     """Suffix-prefill attention against a cached (right-padded) prefix.
 
     q/k_suffix/v_suffix: [B, S, H|Hk, d]; k/v_prefix: [B, P, Hk, d] with
-    per-row valid lengths ``prefix_len`` [B]. Runs the jnp online-softmax
-    oracle on every backend for now — prefill waves are small and XLA
-    fuses this fine; the decode hot path is where the paged Pallas kernel
-    earns its keep. (A Pallas suffix-prefill kernel is a future lever.)
+    per-row valid lengths ``prefix_len`` [B]. There is no Pallas
+    suffix-prefill kernel yet — prefill waves are small and XLA fuses the
+    jnp oracle fine; the decode hot path is where the paged Pallas kernel
+    earns its keep. Dispatch is honest about that: ``auto``/``ref`` run
+    the oracle, ``pallas_interpret`` runs it too (the oracle IS the kernel
+    body being interpreted — there is no second implementation to check
+    against), and an explicit ``impl="pallas"`` raises instead of
+    silently substituting the jnp path for a compiled kernel.
     """
-    del impl
+    impl = _base_impl(impl)
+    if impl == "pallas":
+        raise NotImplementedError(
+            "prefix_attention has no compiled Pallas kernel yet: "
+            "impl='pallas' would silently run the jnp oracle, which is "
+            "not what you asked for. Use impl='auto' (oracle on every "
+            "backend) or 'pallas_interpret'.")
     return _ref.prefix_attention_ref(q, k_prefix, v_prefix, prefix_len,
                                      k_suffix, v_suffix)
 
@@ -207,6 +316,7 @@ def prefix_attention(q, k_prefix, v_prefix, prefix_len, k_suffix, v_suffix,
 def quantize_channels(w, *, bits: int = 8, impl: str = "auto"):
     """Per-channel absmax quantization (codes, scale) — used for KV-cache
     quantization at serve time."""
+    impl = _base_impl(impl)
     if _use_pallas(impl):
         from repro.kernels import quantize as _q
         return _q.quantize_pallas(w, bits=bits, interpret=_interpret(impl))

@@ -36,6 +36,72 @@ def axllm_matmul_ref(x: jax.Array, qt: QTensor,
     return y.astype(out_dtype)
 
 
+def reuse_matmul_ref(x: jax.Array, qt: QTensor,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ deq(W) computed with the reuse (LUT) association.
+
+    Mirrors the reuse kernel's arithmetic exactly: each product is
+    ``x[i,k] * levels[cell]`` (the table entry — sign applied on read for
+    folded affine alphabets), partial sums run *within* each scale group,
+    and the per-channel/per-group scale multiplies the group sum — not the
+    individual products like :func:`axllm_matmul_ref` does. In the dyadic
+    integer regime both associations are exact and bitwise-equal
+    (tests/test_reuse_kernel.py); in general float they differ by normal
+    rounding. jit-safe (pure jnp); use :func:`reuse_mult_count` for the
+    multiply-count side of the contract.
+    """
+    from repro.core.reuse import rc_alphabet
+    codes = decode_codes(qt)
+    levels, fold = rc_alphabet(qt.bits, qt.mode)
+    levels = jnp.asarray(levels)
+    c = codes.astype(jnp.int32)
+    if fold:
+        vals = jnp.take(levels, jnp.abs(c), axis=0)
+        vals = jnp.where(c < 0, -vals, vals)
+    else:
+        vals = jnp.take(levels, c + (levels.shape[0] >> 1), axis=0)
+    kdim, n = qt.shape[-2], qt.shape[-1]
+    m = x.shape[0]
+    xf = x.astype(jnp.float32)
+    scale = _reuse_scale(qt)                       # [G, N]
+    g_rows = scale.shape[0]
+    g = kdim // g_rows
+    xg = xf.reshape(m, g_rows, g)
+    vg = vals.astype(jnp.float32).reshape(g_rows, g, n)
+    part = jnp.einsum("mgk,gkn->gmn", xg, vg,
+                      preferred_element_type=jnp.float32)
+    y = jnp.sum(part * scale[:, None, :], axis=0)
+    return y.astype(out_dtype)
+
+
+def _reuse_scale(qt: QTensor) -> jax.Array:
+    """[G, N] f32 group scales with the affine /qmax folded in (G = 1 for
+    per_channel/per_tensor) — the post-group-sum factor of the reuse path."""
+    n = qt.shape[-1]
+    if qt.granularity == "per_group":
+        s = qt.scale.reshape(-1, n)
+    elif qt.scale.size == n:
+        s = qt.scale.reshape(1, n)
+    else:
+        s = jnp.broadcast_to(jnp.reshape(qt.scale, (1, 1)), (1, n))
+    if qt.mode == "affine":
+        s = s / ((1 << (qt.bits - 1)) - 1)
+    return s.astype(jnp.float32)
+
+
+def reuse_mult_count(qt: QTensor, segment: int) -> int:
+    """Multiplies per activation row the reuse path executes: distinct
+    alphabet cells per (k-row, ``segment``-wide column block), summed —
+    ``core.reuse.segment_unique_counts`` under the kernel's own alphabet
+    fold. Host-side (numpy): requires concrete codes, i.e. call outside
+    jit. Multiply by M for the total of an [M, K] @ [K, N] call."""
+    from repro.core.reuse import rc_alphabet, segment_unique_counts
+    import numpy as np
+    _, fold = rc_alphabet(qt.bits, qt.mode)
+    codes = np.asarray(decode_codes(qt))
+    return int(segment_unique_counts(codes, segment, fold_sign=fold).sum())
+
+
 def lora_matmul_ref(x: jax.Array, qt: QTensor, a: jax.Array, b: jax.Array,
                     scaling: float, out_dtype=jnp.float32) -> jax.Array:
     """y = x @ deq(W) + scaling * (x @ A) @ B  (paper §III, LoRA support)."""

@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: AxLLM reuse (LUT) matmul — the paper's core, on device.
+
+Where :mod:`repro.kernels.axllm_matmul` dequantizes every weight code and
+multiplies (one MAC per element), this kernel implements the Result-Cache
+semantics of paper §III.b: once per activation tile it materializes the
+product of every activation element with the *code alphabet* — a
+``levels``-entry table per (row, k) pair, SqueezeLLM/FineQuant-style — and
+then *gathers* table entries for every repeated code instead of multiplying
+again. For q-bit weights a row segment can contain at most ``2**q`` distinct
+values, so the table build costs ``bm x bk x L`` multiplies and everything
+past the first occurrence of a code is an add-only reuse.
+
+Alphabet (shared contract with core/reuse.rc_alphabet — regression-pinned):
+  affine    levels = [0 .. qmax] magnitudes, sign-folded: code ``c`` reads
+            cell ``|c|`` and the sign rides on the gather (the paper's
+            128-cell RC for 8-bit, 8 cells for int4). The per-channel
+            ``scale/qmax`` factor is applied after the per-group reduction.
+  codebook  levels = the explicit 2**bits table (NF4 / identity), unfolded:
+            cell ``c + 2**(bits-1)``. NF4 is not sign-symmetric, so no fold.
+
+TPU mapping: the gather is expressed as a signed one-hot contraction
+(``[bm, bk*L] @ [bk*L, bn]``) — the gather-free form the MXU prefers; the
+0/1 selector rows are the "adds" of the reuse path. The vector-unit table
+build is the only place activation values are multiplied. The kernel also
+*measures* its reuse: a second output accumulates, once per (j, k) tile, the
+number of distinct alphabet cells per k-row within the bn-wide column
+segment — i.e. the multiplies a Result Cache would actually execute. The
+wrapper scales this by the logical M to report the achieved multiply count,
+directly comparable against ``core.reuse.segment_unique_counts`` /
+``simulator.simulate_matrix`` predictions (kernel_bench's
+predicted-vs-achieved row).
+
+Grid = (M/bm, N/bn, K/bk), all "arbitrary": the multiply-count output is a
+single revisited (1, 1) block accumulated across grid steps, which requires
+the sequential traversal order. VMEM per tile is dominated by the one-hot
+selector (bk x bn x L f32); ops.pick_blocks caps bk so bk*L stays within
+budget (per_group tiles floor at one group).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.axllm_matmul import _unpack_nibbles
+
+# bk * n_levels budget for the LUT/selector tiles (f32 words per activation
+# row / output column). 8192 keeps the selector tile ≈ bn * 32 KB.
+REUSE_BK_LEVELS = 8192
+
+
+def _reuse_kernel(x_ref, codes_ref, scale_ref, levels_ref, out_ref,
+                  mults_ref, acc_ref, *, packed: bool, fold_sign: bool,
+                  groups: int, n_k: int):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _init_count():
+        mults_ref[...] = jnp.zeros_like(mults_ref)
+
+    codes = codes_ref[...]
+    if packed:
+        codes = _unpack_nibbles(codes)
+    codes = codes.astype(jnp.int32)
+    levels = levels_ref[...].astype(jnp.float32)        # [L]
+    n_levels = levels.shape[0]
+    if fold_sign:
+        cells = jnp.abs(codes)                          # [bk, bn] in [0, L)
+        sign = jnp.where(codes < 0, -1.0, 1.0).astype(jnp.float32)
+    else:
+        cells = codes + (n_levels >> 1)
+        sign = None
+    onehot = jax.nn.one_hot(cells, n_levels, dtype=jnp.float32)  # [bk,bn,L]
+    sel = onehot if sign is None else onehot * sign[..., None]
+
+    x = x_ref[...].astype(jnp.float32)                  # [bm, bk]
+    bm, bk = x.shape
+    bn = cells.shape[1]
+    g = bk // groups
+    # the LUT build: every alphabet product computed once per (row, k)
+    tab = x[:, :, None] * levels[None, None, :]         # [bm, bk, L]
+    tabg = tab.reshape(bm, groups, g * n_levels).transpose(1, 0, 2)
+    selg = sel.reshape(groups, g, bn, n_levels) \
+        .transpose(0, 1, 3, 2).reshape(groups, g * n_levels, bn)
+    # the reuse path: signed 0/1 gather-sum per scale group on the MXU
+    part = jax.lax.dot_general(
+        tabg, selg, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)             # [groups, bm, bn]
+    acc_ref[...] += jnp.sum(part * scale_ref[...][:, None, :], axis=0)
+
+    # measured reuse: distinct cells per k-row within this bn segment are
+    # the multiplies the RC executes; everything else was a table hit. The
+    # count is activation-row-independent, so tally it once (i == 0).
+    @pl.when(i == 0)
+    def _count():
+        present = jnp.max(onehot, axis=1)               # [bk, L]
+        mults_ref[0, 0] += jnp.sum(present).astype(jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "packed", "fold_sign", "group_size", "blocks", "interpret"))
+def reuse_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
+                        levels: jax.Array, *, packed: bool = False,
+                        fold_sign: bool = True, group_size: int = 128,
+                        blocks=(8, 128, 256),
+                        interpret: bool = False):
+    """(y[M, N], mults[1, 1]) = reuse-matmul; see module docstring.
+
+    ``scale`` is [1, N] (per_channel, with /qmax folded for affine) or
+    [K/g, N] (per_group). ``levels`` is the [L] f32 alphabet value table
+    from ``core.reuse.rc_alphabet``. ``mults`` is the per-activation-row
+    multiply count: the sum over (k-row, bn-segment) of distinct alphabet
+    cells — multiply by M for the total the lane array would execute.
+    """
+    m, kdim = x.shape
+    n = scale.shape[-1]
+    bm, bk, bn = blocks
+    bm = min(bm, m)
+    bk = min(bk, kdim)
+    bn = min(bn, n)
+    if m % bm or kdim % bk or n % bn:
+        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by blocks "
+                         f"({bm},{bk},{bn})")
+    n_k = kdim // bk
+    per_group = scale.shape[0] > 1
+    if per_group and bk % group_size:
+        raise ValueError("per_group requires group_size | bk")
+    groups = bk // group_size if per_group else 1
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    if packed:
+        codes_spec = pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j))
+    else:
+        codes_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    if per_group:
+        scale_spec = pl.BlockSpec((groups, bn), lambda i, j, k: (k, j))
+    else:
+        scale_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+    levels_spec = pl.BlockSpec((levels.shape[0],), lambda i, j, k: (0,))
+    out_specs = [pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+                 pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))]
+
+    kernel = functools.partial(
+        _reuse_kernel, packed=packed, fold_sign=fold_sign, groups=groups,
+        n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[x_spec, codes_spec, scale_spec, levels_spec],
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(x, codes, scale, levels)

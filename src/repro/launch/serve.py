@@ -18,6 +18,12 @@ Flags of note:
   --num-blocks N    KV pool size in blocks (default: 2x dense equivalent)
   --fuse-qkv        rewrite deployed params to fused wqkv/gate_up
                     projections (one activation pass per block)
+  --reuse           run quantized matmuls through the reuse (LUT) kernel
+                    path (impl="reuse": Result-Cache gather on TPU, jnp
+                    oracle elsewhere — token-identical to the multiply path)
+  --quant-bits N    serve-path weight code width (default cfg.quant_bits)
+  --quant-mode M    'affine' (symmetric uniform, default) or 'codebook'
+                    (NF4 for 4-bit) deploy-quantization alphabet
   --eos-id N        per-slot stop token (overrides cfg.eos_id; -1 disables)
   --long-prompt P   'truncate' (keep the prompt tail, default) or 'reject'
                     prompts longer than max_len-1
@@ -95,6 +101,16 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--no-quantize", action="store_true")
+    ap.add_argument("--reuse", action="store_true",
+                    help="dispatch quantized matmuls through the reuse "
+                         "(LUT) kernel path instead of multiply-dequant")
+    ap.add_argument("--quant-bits", type=int, default=None,
+                    help="weight code width for deploy quantization "
+                         "(default: cfg.quant_bits)")
+    ap.add_argument("--quant-mode", choices=("affine", "codebook"),
+                    default="affine",
+                    help="deploy-quantization alphabet (codebook = NF4 "
+                         "for 4-bit)")
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--decode-chunk", type=int, default=None,
                     help="on-device decode steps per dispatch (default: "
@@ -173,6 +189,9 @@ def main(argv=None):
     eng = ServeEngine(cfg, params, n_slots=args.slots,
                       max_len=args.max_len,
                       quantize=not args.no_quantize,
+                      quant_bits=args.quant_bits,
+                      quant_mode=args.quant_mode,
+                      impl="reuse" if args.reuse else "auto",
                       eos_id=eos_id, long_prompt=args.long_prompt,
                       decode_chunk=args.decode_chunk,
                       fuse_qkv=args.fuse_qkv, adapters=registry,
@@ -191,7 +210,10 @@ def main(argv=None):
                         adapters=adapters)
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in reqs)
-    mode = "bf16" if args.no_quantize else f"axllm-int{cfg.quant_bits}"
+    bits = cfg.quant_bits if args.quant_bits is None else args.quant_bits
+    mode = "bf16" if args.no_quantize else (
+        f"axllm-{args.quant_mode}{bits}"
+        + ("+reuse" if args.reuse else ""))
     lora_tag = f", {eng.stats.lora_requests} LoRA requests" if args.lora \
         else ""
     print(f"[{mode}] {len(reqs)} requests, {toks} tokens, "

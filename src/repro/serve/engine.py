@@ -206,7 +206,9 @@ class ServeEngine:
 
     Construction deploys ``params`` for serving: ``quantize=True``
     converts weight matrices to ``quant_bits`` AxLLM codes
-    (`deploy_quantize`), ``fuse_qkv`` rewrites them through
+    (`deploy_quantize`; ``quant_bits=None`` falls back to
+    ``cfg.quant_bits``, ``quant_mode`` picks affine vs codebook
+    alphabets), ``fuse_qkv`` rewrites them through
     ``api.fuse_params`` (wqkv / gate_up), and ``adapters`` attaches an
     :class:`~repro.serve.adapters.AdapterRegistry` for multi-LoRA
     serving (attention families only). ``decode_chunk`` sets the
@@ -227,7 +229,8 @@ class ServeEngine:
     """
 
     def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 512,
-                 quantize: bool = False, quant_bits: int = 8,
+                 quantize: bool = False, quant_bits: Optional[int] = None,
+                 quant_mode: str = "affine",
                  impl: str = "auto", greedy: bool = True, seed: int = 0,
                  eos_id: Optional[int] = None,
                  long_prompt: str = "truncate",
@@ -249,8 +252,9 @@ class ServeEngine:
         self.cfg = cfg
         self.api: ModelAPI = get_model(cfg, impl=impl)
         if quantize:
+            bits = cfg.quant_bits if quant_bits is None else quant_bits
             params = deploy_quantize(
-                params, QuantConfig(bits=quant_bits, mode="affine",
+                params, QuantConfig(bits=bits, mode=quant_mode,
                                     granularity="per_channel"))
         fuse = cfg.fuse_qkv if fuse_qkv is None else fuse_qkv
         if fuse:

@@ -206,6 +206,7 @@ def _mixed_vs_solo(cfg, params, registry, *, quantize=False, impl="auto",
     return mixed
 
 
+@pytest.mark.slow
 def test_mixed_batch_equals_per_request_fp(params, registry):
     mixed = _mixed_vs_solo(CFG, params, registry)
     # the adapters actually steer generation away from the base model
@@ -222,6 +223,7 @@ def test_mixed_batch_equals_per_request_int8(params, registry):
     _mixed_vs_solo(CFG, params, registry, quantize=True)
 
 
+@pytest.mark.slow
 def test_mixed_batch_int8_interpret_mode(params, registry):
     """Pallas kernel body (interpret mode) under the batched LoRA path."""
     _mixed_vs_solo(CFG, params, registry, quantize=True,
@@ -260,6 +262,7 @@ def test_lora_decode_matches_direct_api(params, registry):
     assert eng.generate([prompt], max_new=6, adapters=[name])[0] == toks
 
 
+@pytest.mark.slow
 def test_chunked_lora_decode_matches_per_token(params, registry):
     ref = ServeEngine(CFG, params, n_slots=2, max_len=64, decode_chunk=1,
                       adapters=registry).generate(
@@ -270,6 +273,7 @@ def test_chunked_lora_decode_matches_per_token(params, registry):
         assert eng.generate(PROMPTS, max_new=6, adapters=NAMES) == ref
 
 
+@pytest.mark.slow
 def test_moe_family_mixed_batch():
     cfg = ModelConfig(name="lmo", family="moe", n_layers=2, d_model=64,
                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=256,

@@ -110,6 +110,25 @@ def test_prefix_attention_matches_causal_oracle():
                                    np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+def test_prefix_attention_dispatch_regression():
+    """impl='pallas' used to silently run the jnp oracle — the dispatch
+    must now refuse loudly until a compiled kernel exists, while
+    'pallas_interpret' (oracle semantics) and the reuse impl aliases
+    (normalized to their base dispatch) keep working."""
+    rng = np.random.default_rng(14)
+    b, s, h, hk, d, pad = 1, 3, 2, 1, 8, 4
+    plen = jnp.asarray([2], jnp.int32)
+    kp, vp = _rand(rng, (b, pad, hk, d)), _rand(rng, (b, pad, hk, d))
+    q = _rand(rng, (b, s, h, d))
+    ks, vs = _rand(rng, (b, s, hk, d)), _rand(rng, (b, s, hk, d))
+    base = ops.prefix_attention(q, kp, vp, plen, ks, vs, impl="auto")
+    with pytest.raises(NotImplementedError, match="prefix_attention"):
+        ops.prefix_attention(q, kp, vp, plen, ks, vs, impl="pallas")
+    for impl in ("pallas_interpret", "ref", "reuse", "reuse_ref"):
+        out = ops.prefix_attention(q, kp, vp, plen, ks, vs, impl=impl)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
 # ---------------------------------------------------------------------------
 # Host manager: allocator, radix index, CoW, eviction
 # ---------------------------------------------------------------------------

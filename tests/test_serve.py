@@ -117,6 +117,7 @@ def test_mixed_length_stream_full_occupancy(params):
     assert st.prefill_compiles <= len(eng._prefill_cache) + 1
 
 
+@pytest.mark.slow
 def test_ragged_prefill_matches_direct_decode(params):
     """Padded mixed-length batched prefill must equal exact-length solo
     prefill + decode (the masking/cursor contract)."""
@@ -139,6 +140,7 @@ def test_quantized_engine_matches_direct_quantized_decode(params):
         assert o == _direct_greedy(CFG, qp, p, 6)
 
 
+@pytest.mark.slow
 def test_nslots_collides_with_stacked_dim():
     """Regression: n_slots == n_super on xLSTM. Shape-guessing slot writes
     picked the superblock axis and corrupted the cache; cache_spec pins the
@@ -189,6 +191,7 @@ def test_cache_spec_matches_shape_inference():
         jax.tree_util.tree_map(check, c3, c5, api.cache_spec)
 
 
+@pytest.mark.slow
 def test_engine_on_hybrid_family_mixed_lengths():
     """Hybrid (Mamba + shared-attn sites, remainder layers): equal-length
     sub-waves + cache_spec writes across attn/conv/ssm/*_rem leaves."""
@@ -231,6 +234,7 @@ def test_eos_early_exit_frees_slot(params):
     assert eng.stats.steps < base_eng.stats.steps
 
 
+@pytest.mark.slow
 def test_eos_mid_chunk_freezes_slot(params):
     """Chunked decode: EOS inside a chunk must freeze the slot's tokens on
     device (validity mask) and produce the same result as per-token."""

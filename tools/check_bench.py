@@ -1,4 +1,5 @@
-"""Bench regression gate for CI: fresh serve throughput vs checked-in floors.
+"""Bench regression gate for CI: fresh serve throughput vs checked-in floors,
+plus provenance-matched kernel-bench checks.
 
 Compares the ``tokens_per_sec`` of the base decode modes in a freshly
 written ``BENCH_serve.json`` against ``benchmarks/serve_floors.json`` and
@@ -9,6 +10,16 @@ gate exists to catch structural regressions (a dispatch sneaking back into
 the decode hot loop, a donation lost, an accidental recompile per step),
 not single-digit jitter. The shared-prefix prefill speedup is gated as a
 *ratio*, which is machine-independent.
+
+The kernel side gates ``BENCH_kernel.json`` (when present) against
+``benchmarks/kernel_floors.json``. Kernel rows carry {impl, backend, units}
+provenance (benchmarks.common.row); the gate refuses to compare rows whose
+provenance disagrees on the fields a check lists in ``match`` — the bug
+this fixes is a CPU ``impl="ref"`` timing silently standing in for a Pallas
+kernel result. Floors additionally pin the impl/units a row must carry.
+The reuse floors gate the paper's core claim: the achieved
+multiply-reduction measured *by the kernel* must stay above its floor and
+within ``max_abs_diff`` of the simulator's predicted reuse rate.
 
 Run:  PYTHONPATH=src python tools/check_bench.py [BENCH_serve.json]
 
@@ -26,6 +37,7 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 FLOORS = REPO / "benchmarks" / "serve_floors.json"
+KERNEL_FLOORS = REPO / "benchmarks" / "kernel_floors.json"
 GRACE = 0.20          # allowed shortfall below a floor before failing
 
 
@@ -61,6 +73,76 @@ def check(bench_path: pathlib.Path) -> list:
     return errors
 
 
+def _kernel_rows(report: dict) -> dict:
+    """name -> (value, meta) for every persisted kernel_bench row.
+
+    Rows are ``[name, value, derived]`` or ``[..., meta]`` where meta is
+    the {impl, backend, units} provenance dict; legacy rows get {}.
+    """
+    out = {}
+    for rows in report.get("rows", {}).values():
+        for r in rows:
+            meta = r[3] if len(r) > 3 and isinstance(r[3], dict) else {}
+            out[r[0]] = (float(r[1]), meta)
+    return out
+
+
+def check_kernel(bench_path: pathlib.Path) -> list:
+    """Gate BENCH_kernel.json rows against kernel_floors.json.
+
+    Floors compare a row's value only after its provenance matches the
+    floor's pinned impl/units; pairs compare two rows only when every
+    field listed in ``match`` agrees between them.
+    """
+    floors = json.loads(KERNEL_FLOORS.read_text())
+    rows = _kernel_rows(json.loads(bench_path.read_text()))
+    errors = []
+    for name, spec in floors.get("values", {}).items():
+        if name not in rows:
+            errors.append(f"kernel row {name!r} has a floor but is missing "
+                          f"from {bench_path.name}")
+            continue
+        value, meta = rows[name]
+        bad = [f"{k}={meta.get(k)!r} (want {spec[k]!r})"
+               for k in ("impl", "backend", "units")
+               if k in spec and meta.get(k) != spec[k]]
+        if bad:
+            errors.append(f"{name}: provenance mismatch — {'; '.join(bad)}")
+            continue
+        verdict = "OK" if value >= spec["floor"] else "FAIL"
+        print(f"  {name}: {value} vs floor {spec['floor']} "
+              f"[{meta.get('impl')}/{meta.get('backend')}/"
+              f"{meta.get('units')}] {verdict}")
+        if value < spec["floor"]:
+            errors.append(f"{name}: {value} fell below its floor "
+                          f"{spec['floor']}")
+    for pair in floors.get("pairs", []):
+        a, b = pair["a"], pair["b"]
+        missing = [n for n in (a, b) if n not in rows]
+        if missing:
+            errors.append(f"pair {pair['name']!r}: missing rows {missing}")
+            continue
+        (va, ma), (vb, mb) = rows[a], rows[b]
+        drift = [f"{k}: {ma.get(k)!r} vs {mb.get(k)!r}"
+                 for k in pair.get("match", []) if ma.get(k) != mb.get(k)]
+        if drift:
+            errors.append(f"pair {pair['name']!r}: provenance drift — "
+                          f"{'; '.join(drift)} (rows are not comparable)")
+            continue
+        tol = pair.get("max_abs_diff")
+        diff = abs(va - vb)
+        if tol is not None and diff > tol:
+            print(f"  {pair['name']}: |{va} - {vb}| = {diff:.4g} "
+                  f"> tol {tol} FAIL")
+            errors.append(f"pair {pair['name']!r}: |{a} - {b}| = {diff:.4g}"
+                          f" exceeds max_abs_diff {tol}")
+        else:
+            extra = f", |diff| = {diff:.4g} <= {tol}" if tol is not None \
+                else ""
+            print(f"  {pair['name']}: provenance matched{extra} OK")
+    return errors
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     bench = pathlib.Path(argv[0]) if argv else REPO / "BENCH_serve.json"
@@ -70,12 +152,20 @@ def main(argv=None) -> int:
         return 1
     print(f"check_bench: {bench.name} vs {FLOORS.relative_to(REPO)}")
     errors = check(bench)
+    kernel_bench = REPO / "BENCH_kernel.json"
+    if kernel_bench.exists():
+        print(f"check_bench: {kernel_bench.name} vs "
+              f"{KERNEL_FLOORS.relative_to(REPO)}")
+        errors += check_kernel(kernel_bench)
+    else:
+        print("check_bench: BENCH_kernel.json not present — kernel gate "
+              "skipped")
     if errors:
         print(f"\nFAIL ({len(errors)}):")
         for e in errors:
             print(f"  - {e}")
         return 1
-    print("\nOK: serve throughput at or above floors")
+    print("\nOK: serve throughput and kernel rows at or above floors")
     return 0
 
 
