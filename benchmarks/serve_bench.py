@@ -27,6 +27,14 @@ the decode hot path:
     (submitted prompt tokens / wall time inside prefill waves) must beat
     the dense engine by >= 1.5x — the serving-level payoff of the paper's
     computation-reuse principle
+  - tensor-parallel serving (``axllm-int8/chunk8/meshN`` rows): the same
+    int8/chunk8 engine under a 1xN ("data","model") mesh at N = --mesh
+    sizes (default 1/2/8, forced host CPU devices). The meshN rows use a
+    request stream sized to keep every slot occupied (occupancy ~= 1.0 in
+    the recorded stats — see --requests/--prompt-pool); check_bench gates
+    the mesh1 row against the single-device floor, proving the mesh path
+    compiles to the same program at size 1. Sizes beyond the device count
+    record a "skipped" row instead of failing.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
 
@@ -88,7 +96,7 @@ def _build():
 
 
 def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
-           fuse_qkv: bool, lora: int = 0, paged: bool = False):
+           fuse_qkv: bool, lora: int = 0, paged: bool = False, mesh=None):
     from repro.serve.engine import ServeEngine
 
     if lora:
@@ -112,7 +120,7 @@ def _serve(cfg, params, p, quantize: bool, decode_chunk: int,
                            max_len=p["max_len"], quantize=quantize,
                            decode_chunk=decode_chunk, fuse_qkv=fuse_qkv,
                            adapters=registry, paged=paged,
-                           kv_block_size=16)
+                           kv_block_size=16, mesh=mesh)
 
     # untimed warmup pass: the timed engine inherits the jitted
     # prefill-bucket/chunk-decode/writer callables, so the trajectory below
@@ -190,8 +198,24 @@ def _serve_shared_prefix(cfg, params, sp: dict, n_slots: int, paged: bool):
     }
 
 
-def bench(smoke: bool = True) -> dict:
-    p = SMOKE if smoke else FULL
+#: mesh sizes the meshN rows run at (1xN "data"/"model" host meshes)
+MESH_SIZES = (1, 2, 8)
+
+
+def bench(smoke: bool = True, requests: int = None, prompt_pool=None,
+          mesh_sizes=MESH_SIZES) -> dict:
+    from repro.launch.mesh import force_host_device_count, make_host_mesh
+
+    # before the first jax computation: the CPU host-device forcing only
+    # takes effect before backend init (no-op under pytest, whose conftest
+    # already forces 8)
+    if mesh_sizes:
+        force_host_device_count(max(mesh_sizes))
+    p = dict(SMOKE if smoke else FULL)
+    if requests is not None:
+        p["requests"] = requests
+    if prompt_pool is not None:
+        p["prompt_lens"] = tuple(prompt_pool)
     cfg, params = _build()
     report = {
         "smoke": smoke,
@@ -204,6 +228,23 @@ def bench(smoke: bool = True) -> dict:
     for label, quant, chunk, fuse, lora, paged in MODES:
         report["modes"][label] = _serve(cfg, params, p, quant, chunk, fuse,
                                         lora=lora, paged=paged)
+    # tensor-parallel rows: int8/chunk8 under a 1xN mesh, with a stream
+    # long enough that every slot stays occupied (the hardcoded 6-request
+    # smoke workload drains before occupancy stabilizes)
+    import jax
+    n_dev = len(jax.devices())
+    p_mesh = dict(p, requests=max(p["requests"], 4 * p["n_slots"]))
+    report["mesh"] = {"sizes": list(mesh_sizes), "devices": n_dev,
+                      "requests": p_mesh["requests"]}
+    for msize in mesh_sizes:
+        label = f"axllm-int8/chunk8/mesh{msize}"
+        if msize > n_dev:
+            report["modes"][label] = {
+                "skipped": f"needs {msize} devices, have {n_dev}"}
+            continue
+        mesh = make_host_mesh(data=1, model=msize)
+        report["modes"][label] = _serve(cfg, params, p_mesh, True, 8,
+                                        False, mesh=mesh)
     for base in ("bf16", "axllm-int8"):
         t1 = report["modes"][f"{base}/chunk1"]["tokens_per_sec"]
         t8 = report["modes"][f"{base}/chunk8"]["tokens_per_sec"]
@@ -242,6 +283,9 @@ def run():
     rep = bench(smoke=True)
     rows = []
     for label, m in rep["modes"].items():
+        if "skipped" in m:
+            rows.append((f"serve/{label}", 0.0, m["skipped"]))
+            continue
         us = 1e6 * m["wall_s"] / max(m["generated_tokens"], 1)
         rows.append((f"serve/{label}", us,
                      f"tok/s={m['tokens_per_sec']};"
@@ -263,12 +307,30 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload for CI (seconds, not minutes)")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override the workload's request count (the meshN "
+                         "rows further raise it to >= 4*n_slots so slots "
+                         "stay occupied)")
+    ap.add_argument("--prompt-pool", default=None,
+                    help="comma list of prompt lengths cycled over the "
+                         "stream (overrides the workload's prompt_lens)")
+    ap.add_argument("--mesh", default=",".join(map(str, MESH_SIZES)),
+                    help="comma list of tensor-parallel mesh sizes for the "
+                         "meshN rows (empty string disables them)")
     args = ap.parse_args(argv)
-    rep = bench(smoke=args.smoke)
+    pool = None
+    if args.prompt_pool:
+        pool = tuple(int(x) for x in args.prompt_pool.split(",") if x)
+    sizes = tuple(int(x) for x in args.mesh.split(",") if x)
+    rep = bench(smoke=args.smoke, requests=args.requests, prompt_pool=pool,
+                mesh_sizes=sizes)
     rep["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     with open(args.out, "w") as f:
         json.dump(rep, f, indent=2, sort_keys=True)
     for label, m in rep["modes"].items():
+        if "skipped" in m:
+            print(f"[{label}] skipped: {m['skipped']}")
+            continue
         print(f"[{label}] {m['generated_tokens']} tokens "
               f"{m['tokens_per_sec']} tok/s "
               f"occupancy {m['stats']['mean_occupancy']:.2f} "

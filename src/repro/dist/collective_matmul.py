@@ -19,6 +19,16 @@ different summation order for the reduce-scatter form).
   ring_matmul_reducescatter  x:[B, K/p]  w:[K/p, N]  -> y:[B, N/p]
     (partial products are reduced while rotating: each output block
      travels the ring once, accumulating every shard's contribution)
+
+`w` may be a QTensor shard (the serving deploy-quantized layout): the per
+-hop block slice then slices codes rows/columns — packed int4 codes pack
+along OUT, so K-row slicing never splits a byte — together with the
+matching per-group scale rows, and the block dot dispatches through
+``ops.axllm_matmul`` (``impl="reuse"`` runs each block through the reuse
+(LUT) kernel; in the dyadic regime the accumulated result is bit-exact
+against ``ops.reuse_matmul`` on the gathered operand, since every
+per-block dot and the fp32 accumulation are exact there regardless of
+association — see tests/test_reuse_kernel.py).
 """
 
 from __future__ import annotations
@@ -26,17 +36,66 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantization import QTensor
+from repro.kernels import ops
+
 
 def _ring_perm(n: int):
     return [(j, (j + 1) % n) for j in range(n)]
 
 
-def ring_allgather_matmul(x: jax.Array, w: jax.Array,
-                          axis_name: str) -> jax.Array:
+def _qslice(qt: QTensor, start, size: int, axis: int) -> QTensor:
+    """Static-size dynamic slice of a 2-D [K, N] QTensor along K (axis=0)
+    or N (axis=1), keeping codes/scale/metadata consistent.
+
+    `start` may be traced (it is `block_index * block_size` inside the
+    ring); `size` must be static. Constraints are checked statically:
+    K-blocks must cover whole scale groups, N-blocks of packed int4 codes
+    must cover whole bytes."""
+    if axis == 0:
+        if qt.granularity == "per_group" and size % qt.group_size:
+            raise ValueError(
+                f"ring K-block {size} must be a multiple of the scale "
+                f"group size {qt.group_size}")
+        codes = jax.lax.dynamic_slice_in_dim(qt.codes, start, size, axis=0)
+        scale = qt.scale
+        if qt.granularity == "per_group":
+            g = qt.group_size
+            scale = jax.lax.dynamic_slice_in_dim(
+                scale, start // g, size // g, axis=0)
+        shape = (size, qt.shape[-1])
+    else:
+        csize = size
+        cstart = start
+        if qt.packed:
+            if size % 2:
+                raise ValueError(
+                    f"ring N-block {size} of packed int4 codes must be even")
+            csize, cstart = size // 2, start // 2
+        codes = jax.lax.dynamic_slice_in_dim(qt.codes, cstart, csize, axis=-1)
+        scale = qt.scale
+        if qt.granularity in ("per_channel", "per_group"):
+            scale = jax.lax.dynamic_slice_in_dim(scale, start, size, axis=-1)
+        shape = (qt.shape[-2], size)
+    return QTensor(codes=codes, scale=scale, codebook=qt.codebook,
+                   bits=qt.bits, mode=qt.mode, granularity=qt.granularity,
+                   group_size=qt.group_size, packed=qt.packed, shape=shape)
+
+
+def _block_dot(xb: jax.Array, wb, impl: str) -> jax.Array:
+    if isinstance(wb, QTensor):
+        return ops.axllm_matmul(xb, wb, impl=impl, out_dtype=jnp.float32)
+    return jnp.dot(xb.astype(jnp.float32), wb.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def ring_allgather_matmul(x: jax.Array, w, axis_name: str, *,
+                          impl: str = "auto") -> jax.Array:
     """y_local = x_global @ w_local without materializing x_global.
 
     x: [B, K_loc] (this shard's column block of the [B, K] activations);
-    w: [K, N_loc] (full contraction dim, this shard's output columns)."""
+    w: [K, N_loc] (full contraction dim, this shard's output columns) —
+    dense array or QTensor; `impl` selects the quantized block-dot kernel."""
     n = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     k_loc = x.shape[-1]
@@ -46,23 +105,25 @@ def ring_allgather_matmul(x: jax.Array, w: jax.Array,
     # unrolls and XLA pipelines ppermute(t) under dot(t)
     for t in range(n):
         src = (idx - t) % n            # owner of the block xb currently holds
-        wb = jax.lax.dynamic_slice_in_dim(w, src * k_loc, k_loc, axis=0)
-        acc = acc + jnp.dot(xb.astype(jnp.float32), wb.astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
+        if isinstance(w, QTensor):
+            wb = _qslice(w, src * k_loc, k_loc, axis=0)
+        else:
+            wb = jax.lax.dynamic_slice_in_dim(w, src * k_loc, k_loc, axis=0)
+        acc = acc + _block_dot(xb, wb, impl)
         if t != n - 1:
             xb = jax.lax.ppermute(xb, axis_name, _ring_perm(n))
     return acc.astype(x.dtype)
 
 
-def ring_matmul_reducescatter(x: jax.Array, w: jax.Array,
-                              axis_name: str) -> jax.Array:
+def ring_matmul_reducescatter(x: jax.Array, w, axis_name: str, *,
+                              impl: str = "auto") -> jax.Array:
     """y_local = reduce_scatter(x_local @ w_local) fused into the ring.
 
-    x: [B, K_loc]; w: [K_loc, N] (this shard's rows of the full weight).
-    Each shard's [B, N] partial product is never materialized: output
-    column blocks circulate the ring, each shard adding its partial for
-    the block it currently holds; after p-1 hops every block lands on its
-    owner fully reduced."""
+    x: [B, K_loc]; w: [K_loc, N] (this shard's rows of the full weight —
+    dense array or QTensor). Each shard's [B, N] partial product is never
+    materialized: output column blocks circulate the ring, each shard
+    adding its partial for the block it currently holds; after p-1 hops
+    every block lands on its owner fully reduced."""
     n = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     n_loc = w.shape[-1] // n
@@ -72,9 +133,11 @@ def ring_matmul_reducescatter(x: jax.Array, w: jax.Array,
         # the chunk in hand is destined for shard (idx - t - 1); at the
         # final step that is idx itself — own partial added last, kept
         blk = (idx - t - 1) % n
-        wb = jax.lax.dynamic_slice_in_dim(w, blk * n_loc, n_loc, axis=1)
-        acc = acc + jnp.dot(xf, wb.astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
+        if isinstance(w, QTensor):
+            wb = _qslice(w, blk * n_loc, n_loc, axis=1)
+        else:
+            wb = jax.lax.dynamic_slice_in_dim(w, blk * n_loc, n_loc, axis=1)
+        acc = acc + _block_dot(xf, wb, impl)
         if t != n - 1:
             acc = jax.lax.ppermute(acc, axis_name, _ring_perm(n))
     return acc.astype(x.dtype)

@@ -60,6 +60,15 @@ DEFAULT_RULES: Dict[str, Any] = {
 
 SERVE_RULES: Dict[str, Any] = dict(DEFAULT_RULES, embed=None)
 
+# Tensor-parallel serving with head-sharded KV caches: when every layer's
+# kv-head count divides the "model" axis, shard the cache along heads and
+# keep the sequence dim local — decode attention then needs no cross-shard
+# softmax combine. ServeEngine picks between this and SERVE_RULES (whose
+# "cache_seq" rule routes decode through decode_attention_seqsharded) via
+# `serve_rules_for`.
+SERVE_HEAD_RULES: Dict[str, Any] = dict(
+    SERVE_RULES, cache_seq=None, cache_seq_long=None)
+
 DP_SERVE_RULES: Dict[str, Any] = dict(
     DEFAULT_RULES,
     batch=("pod", "data", "model"),
@@ -133,6 +142,12 @@ def resolve_spec(shape: Sequence[int], names: Sequence[Optional[str]], mesh,
         for ax in axes:
             if ax not in axis_sizes or ax in used:
                 continue
+            if axis_sizes[ax] == 1:
+                # a trivial axis contributes nothing; naming it would only
+                # make the spec (and jit cache keys) differ from the
+                # single-device program. Mesh size 1 must compile to
+                # exactly the unsharded computation.
+                continue
             if dim % (prod * axis_sizes[ax]):
                 break  # growing the product further cannot restore divisibility
             chosen.append(ax)
@@ -181,7 +196,13 @@ def _param_names(key: str, ndim: int) -> Tuple[Optional[str], ...]:
     [in, out] matrix takes ("embed", "mlp") -> (FSDP, TP). Named
     exceptions: embeddings, the untied head, MoE expert stacks (expert dim
     is the TP dim; activations stay replicated over "model" between MoE
-    layers — see models/moe.py), and routers (tiny, replicated out dim)."""
+    layers — see models/moe.py), and routers (tiny, replicated out dim).
+
+    The block-output projections "wo" and "down" flip to ("mlp", "embed"):
+    their *input* dim is the wide one, so the TP axis shards the
+    contraction (row-parallel). Paired with column-parallel wqkv/gate_up
+    this is the Megatron split — each attention/MLP block needs exactly one
+    all-reduce, placed by GSPMD after the row-parallel matmul."""
     if ndim < 2:
         return (None,) * ndim
     if key == "embedding":
@@ -192,6 +213,8 @@ def _param_names(key: str, ndim: int) -> Tuple[Optional[str], ...]:
         return (None,) * (ndim - 3) + ("expert", "embed", "mlp")
     if key == "router":
         return (None,) * (ndim - 2) + ("embed", None)
+    if key in ("wo", "down"):
+        return (None,) * (ndim - 2) + ("mlp", "embed")
     return (None,) * (ndim - 2) + ("embed", "mlp")
 
 
@@ -207,10 +230,20 @@ def _qtensor_specs(qt: QTensor, key: str, mesh, rules) -> QTensor:
     codes_spec = NamedSharding(
         mesh, resolve_spec(qt.codes.shape, names[-qt.codes.ndim:], mesh,
                            rules))
-    scale_names = (None,) * (qt.scale.ndim - 1) + (names[-1],)
+    scale_names = [None] * (qt.scale.ndim - 1) + [names[-1]]
+    if qt.granularity == "per_group" and qt.scale.ndim >= 3:
+        # per-group scales [*, in//g, 1, out]: the group-row dim tracks the
+        # weight's in-dim name so row-parallel codes keep their scale rows
+        # local (divisibility falls back to replication as usual)
+        scale_names[-3] = names[-2]
+    scale_names = tuple(scale_names)
     scale_spec = NamedSharding(
         mesh, resolve_spec(qt.scale.shape, scale_names, mesh, rules))
-    return QTensor(codes=codes_spec, scale=scale_spec, codebook=None,
+    # codebook alphabets (tiny [2**bits] vectors) replicate; mirroring the
+    # leaf (vs None) keeps the spec treedef identical to the value treedef
+    # for tree_map(jax.device_put, params, specs) pairing
+    cb_spec = None if qt.codebook is None else NamedSharding(mesh, P())
+    return QTensor(codes=codes_spec, scale=scale_spec, codebook=cb_spec,
                    bits=qt.bits, mode=qt.mode, granularity=qt.granularity,
                    group_size=qt.group_size, packed=qt.packed, shape=qt.shape)
 
@@ -278,3 +311,72 @@ def cache_specs(cache, mesh, batch: int, max_len: int,
                              resolve_spec(node.shape, names, mesh, rules))
 
     return walk("", cache)
+
+
+def _paged_names(key: str, shape) -> Tuple[Optional[str], ...]:
+    ndim = len(shape)
+    if key in _CACHE_KV_KEYS and ndim >= 4:
+        # pool leaves [*stack, NB, bs, Hk, hd|1]: shard heads only — the
+        # block axis is the pager's address space and must stay whole on
+        # every shard so block tables index identically everywhere
+        return (None,) * (ndim - 2) + ("kv_heads", None)
+    if key == "pos":
+        return ("batch",) + (None,) * (ndim - 1)
+    return (None,) * ndim  # block_tables replicated (host-written)
+
+
+def paged_cache_specs(cache, mesh, rules: Optional[Dict[str, Any]] = None):
+    """NamedSharding pytree for a block-paged KV cache (attention.py's
+    paged layout: pools [L, NB, bs, Hk, hd], block_tables [B, MB]).
+
+    Only the kv-head dim shards ("along heads"): every device holds the
+    full block pool address space, so the host-side pager, radix prefix
+    index, and copy-on-write block copies stay shard-oblivious."""
+    rules = _active_rules(rules)
+
+    def walk(key, node):
+        if isinstance(node, dict):
+            return {k: walk(k, v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+            return type(node)(walk(key, v) for v in node)
+        names = _paged_names(key, node.shape)
+        return NamedSharding(mesh,
+                             resolve_spec(node.shape, names, mesh, rules))
+
+    return walk("", cache)
+
+
+def adapter_specs(stacked, mesh, rules: Optional[Dict[str, Any]] = None):
+    """NamedSharding pytree for AdapterRegistry's stacked LoRA tensors
+    ({target: {"lora_a": [L, M, n_in, r], "lora_b": [L, M, r, n_out]}}).
+
+    A is replicated (its output is the tiny rank dim); B shards its out
+    dim with the same logical name as the target projection's out dim, so
+    the delta lands already laid out like the base projection's output:
+    column-parallel for wq/wk/wv (out dim = sharded heads), replicated for
+    wo (out dim = embed, which SERVE rules keep whole)."""
+    rules = _active_rules(rules)
+    out = {}
+    for target, mats in stacked.items():
+        b = mats["lora_b"]
+        out_name = "embed" if target in ("wo", "down") else "mlp"
+        b_names = (None,) * (b.ndim - 1) + (out_name,)
+        out[target] = {
+            "lora_a": NamedSharding(mesh, P()),
+            "lora_b": NamedSharding(
+                mesh, resolve_spec(b.shape, b_names, mesh, rules)),
+        }
+    return out
+
+
+def serve_rules_for(mesh, n_kv_heads: int) -> Dict[str, Any]:
+    """Pick the serving rule set for a mesh: head-sharded KV caches when
+    the kv-head count divides the "model" axis (one collective per block,
+    no attention-side communication), otherwise SERVE_RULES, whose
+    "cache_seq" rule shards the cache sequence dim — models/attention.py
+    detects that layout and routes decode through
+    kernels.sharded_decode.decode_attention_seqsharded."""
+    model = int(dict(mesh.shape).get("model", 1))
+    if model <= 1 or n_kv_heads % model == 0:
+        return SERVE_HEAD_RULES
+    return SERVE_RULES

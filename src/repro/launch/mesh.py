@@ -11,7 +11,54 @@ device state (the dry-run sets XLA_FLAGS before first jax init).
 
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def force_host_device_count(n: int) -> None:
+    """Best-effort: expose >= ``n`` host CPU devices for serving meshes.
+
+    Appends ``--xla_force_host_platform_device_count`` to XLA_FLAGS —
+    effective only BEFORE the first jax backend initialization (call it
+    at the top of a launcher main(), as tests/conftest.py does for
+    pytest). A no-op when the flag is already set."""
+    if n <= 1:
+        return
+    flag = "--xla_force_host_platform_device_count"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if flag not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}={n}".strip()
+
+
+def parse_mesh_shape(spec: str):
+    """Parse a ``--mesh-shape`` string into (data, model) sizes.
+
+    Accepts a bare model-axis size ("8" -> data=1, model=8) or an
+    explicit "DATAxMODEL" / "DATA,MODEL" pair ("2x4" -> data=2, model=4).
+
+    >>> parse_mesh_shape("8")
+    (1, 8)
+    >>> parse_mesh_shape("2x4")
+    (2, 4)
+    """
+    parts = [int(p) for p in spec.lower().replace("x", ",").split(",") if p]
+    if not parts or any(p < 1 for p in parts) or len(parts) > 2:
+        raise ValueError(f"mesh shape {spec!r}: expected 'MODEL' or "
+                         "'DATAxMODEL' with positive sizes")
+    if len(parts) == 1:
+        return 1, parts[0]
+    return parts[0], parts[1]
+
+
+def make_serve_mesh(spec: str):
+    """Build the ("data", "model") serving mesh for a --mesh-shape value.
+
+    Forces enough host CPU devices first (no-op once jax initialized or
+    on real accelerator backends with sufficient devices)."""
+    data, model = parse_mesh_shape(spec)
+    force_host_device_count(data * model)
+    return make_host_mesh(data=data, model=model)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -33,6 +33,11 @@ Flags of note:
                     over base + adapters (the dual-pipeline serving path;
                     see also --lora-rank/--lora-alpha/--lora-targets/
                     --max-loras)
+  --mesh-shape S    tensor-parallel serving mesh: a model-axis size ("8")
+                    or "DATAxMODEL" ("2x4"); default "1" serves
+                    single-device. Sizes > 1 on CPU force host devices
+                    (see launch/mesh.py); sharded decode is
+                    token-identical to single-device
   --stats           print the engine's scheduler stats as JSON
                     (admitted/finished/truncated, tokens/step, occupancy)
 
@@ -44,6 +49,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -149,10 +155,21 @@ def main(argv=None):
                          "target (subset of wq,wk,wv,wo)")
     ap.add_argument("--max-loras", type=int, default=None,
                     help="registry capacity (default: max(4, --lora))")
+    ap.add_argument("--mesh-shape", default="1",
+                    help="tensor-parallel serving mesh: model-axis size "
+                         "('8') or 'DATAxMODEL' ('2x4'); '1' (default) "
+                         "serves single-device")
     ap.add_argument("--stats", action="store_true",
                     help="print scheduler stats JSON after the run")
     ap.add_argument("--set", action="append", default=[])
     args = ap.parse_args(argv)
+
+    # mesh construction precedes the first jax computation: on CPU the
+    # host-device forcing flag only takes effect before backend init
+    from repro.launch.mesh import make_serve_mesh, parse_mesh_shape
+    mesh = None
+    if math.prod(parse_mesh_shape(args.mesh_shape)) > 1:
+        mesh = make_serve_mesh(args.mesh_shape)
 
     cfg = get_config(args.arch)
     overrides = dict(kv.split("=", 1) for kv in args.set)
@@ -197,7 +214,7 @@ def main(argv=None):
                       fuse_qkv=args.fuse_qkv, adapters=registry,
                       paged=args.paged, kv_block_size=args.kv_block_size,
                       num_blocks=args.num_blocks,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache, mesh=mesh)
     rng = np.random.default_rng(0)
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -216,9 +233,11 @@ def main(argv=None):
         + ("+reuse" if args.reuse else ""))
     lora_tag = f", {eng.stats.lora_requests} LoRA requests" if args.lora \
         else ""
+    mesh_tag = f", mesh {args.mesh_shape}" if mesh is not None else ""
     print(f"[{mode}] {len(reqs)} requests, {toks} tokens, "
           f"{toks/dt:.1f} tok/s, occupancy "
-          f"{eng.stats.mean_occupancy:.2f}{lora_tag} (host fallback path)")
+          f"{eng.stats.mean_occupancy:.2f}{lora_tag}{mesh_tag} "
+          f"(host fallback path)")
     if args.paged:
         print(f"  paged: {eng.stats.prefix_hit_tokens} prefix-hit tokens, "
               f"{eng.stats.blocks_in_use} blocks cached, "

@@ -216,6 +216,20 @@ class AdapterRegistry:
         self._names[row] = None
         self._refs[row] = 0
 
+    def place(self, specs: Dict[str, Dict[str, object]]) -> None:
+        """Commit the stacked tensors to device placements (one-time, at
+        engine init under a mesh: `dist.sharding.adapter_specs` gives
+        replicated A / out-sharded B).
+
+        Later hot `add`/`evict` updates go through ``.at[:, row].set``,
+        which preserves the committed sharding — swaps stay cheap and the
+        stacked tensors never silently migrate back to one device."""
+        import jax
+        for t, mats in specs.items():
+            for key, spec in mats.items():
+                self._stacked[t][key] = jax.device_put(
+                    self._stacked[t][key], spec)
+
     # -- engine lifecycle ------------------------------------------------------
     def acquire(self, name: str) -> int:
         """Pin ``name`` for an in-flight request; returns its row index."""

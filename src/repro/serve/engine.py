@@ -99,6 +99,7 @@ tokens and `truncated=True` (`return_requests=True` exposes the flags).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -111,6 +112,7 @@ import jax.numpy as jnp
 
 from repro.core.axllm_linear import deploy_quantize
 from repro.core.quantization import QuantConfig
+from repro.dist import sharding as shd
 from repro.models.model import ModelAPI, get_model
 from repro.serve.adapters import AdapterRegistry
 from repro.serve.decode import decode_steps
@@ -224,6 +226,19 @@ class ServeEngine:
     much again for retained prefixes), ``prefix_cache=False`` keeps the
     paging but disables the radix index.
 
+    ``mesh`` (a `jax.sharding.Mesh`, e.g. from
+    :func:`repro.launch.mesh.make_host_mesh`) turns on tensor-parallel
+    serving: quantized params are placed column-parallel (wqkv/gate_up)
+    / row-parallel (wo/down) over the mesh's "model" axis, the KV cache
+    (dense or paged pool) shards along kv-heads when they divide the
+    axis — otherwise along the sequence dim, which routes decode through
+    the fused shard_map kernel ``decode_attention_seqsharded`` — and
+    every prefill/decode dispatch traces under the mesh context so GSPMD
+    partitions the whole hot path. A mesh of total size 1 compiles to
+    exactly the single-device program. Tokens are identical to unmeshed
+    serving across quantize/reuse/fused/LoRA/paged modes
+    (tests/test_sharded_serve.py).
+
     Serve with ``submit(prompt, max_new, adapter=...)`` + ``step()`` /
     ``run()``, or the one-shot ``generate(prompts, ...)``.
     """
@@ -239,7 +254,8 @@ class ServeEngine:
                  adapters: Optional[AdapterRegistry] = None,
                  paged: bool = False, kv_block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 mesh=None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "ServeEngine drives token-only prefill; encoder-decoder "
@@ -306,6 +322,12 @@ class ServeEngine:
             self.pager = None
             self.cache = self.api.init_cache(n_slots, max_len)
         self._validate_cache_spec()
+        self.mesh = mesh
+        self._rules = None
+        if mesh is not None:
+            self._rules = shd.serve_rules_for(
+                mesh, getattr(cfg, "n_kv_heads", 1) or 1)
+            self._place_on_mesh()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
@@ -346,6 +368,52 @@ class ServeEngine:
             return leaf
 
         jax.tree_util.tree_map(check, self.cache, spec)
+
+    def _mesh_ctx(self):
+        """Sharding context for jit trace/dispatch sites: binds the
+        engine's (mesh, rules) so `shard()` constraints and the
+        seq-sharded decode routing see the serving layout. No-op without
+        a mesh — the single-device program is untouched."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shd.activate(self.mesh, self._rules)
+
+    def _place_on_mesh(self):
+        """Commit params / KV cache / stacked LoRA tensors to the mesh.
+
+        Params use `param_specs` inference (column-parallel wqkv/gate_up,
+        row-parallel wo/down — one all-reduce per block under GSPMD);
+        the cache uses `cache_specs` (dense: kv-heads or sequence dim per
+        the rule set) or `paged_cache_specs` (pool sharded along heads
+        only; the pager's block address space stays whole per shard, so
+        block tables and copy-on-write copies are shard-oblivious).
+        Stacked adapters place with replicated A / out-sharded B."""
+        mesh, rules = self.mesh, self._rules
+        pspecs = shd.param_specs(self.params, mesh, rules)
+        self.params = jax.tree_util.tree_map(jax.device_put, self.params,
+                                             pspecs)
+        if self.paged:
+            cspecs = shd.paged_cache_specs(self.cache, mesh, rules)
+        else:
+            cspecs = shd.cache_specs(self.cache, mesh, self.n_slots,
+                                     self.max_len, rules=rules)
+        self.cache = jax.tree_util.tree_map(jax.device_put, self.cache,
+                                            cspecs)
+        if self.registry is not None:
+            self.registry.place(
+                shd.adapter_specs(self.registry.stacked, mesh, rules))
+
+    def _constrain_wave(self, wave_cache, batch: int):
+        """Pin a prefill wave cache (traced, inside jit) to the engine
+        cache's layout, so the slot-scatter in `_write_wave` moves shards
+        instead of rematerializing the wave on one device. Identity
+        without a mesh."""
+        if self.mesh is None:
+            return wave_cache
+        specs = shd.cache_specs(wave_cache, self.mesh, batch, self.max_len,
+                                rules=self._rules)
+        return jax.tree_util.tree_map(jax.lax.with_sharding_constraint,
+                                      wave_cache, specs)
 
     def _copy_blocks(self, cache, src, dst):
         """Copy pool blocks ``src`` onto ``dst`` on every pool leaf — the
@@ -458,7 +526,10 @@ class ServeEngine:
                 if lora:
                     kw.update(adapters=stacked, adapter_idx=aidx,
                               lora_scaling=scaling)
-                return api.prefill(params, {"tokens": toks}, cache, **kw)
+                logits, wave_cache = api.prefill(params, {"tokens": toks},
+                                                 cache, **kw)
+                return logits, self._constrain_wave(wave_cache,
+                                                    toks.shape[0])
 
             self._prefill_cache[key] = jax.jit(fn)
             self.stats.prefill_compiles += 1
@@ -559,6 +630,7 @@ class ServeEngine:
                               lora_scaling=scaling)
                 logits, wave_cache = api.prefill(params, {"tokens": toks},
                                                  wave, **kw)
+                wave_cache = self._constrain_wave(wave_cache, toks.shape[0])
                 new_cache = dict(cache)
                 for name in pool_leaves:
                     w = wave_cache[name]          # [L, wb, pl, hk, x]
@@ -718,6 +790,10 @@ class ServeEngine:
         on-device steps. With an adapter registry the per-slot [n_slots]
         adapter-index row rides along so mixed base/LoRA slots decode in
         the same scan. Returns False when no work is left."""
+        with self._mesh_ctx():
+            return self._step(max_n)
+
+    def _step(self, max_n: Optional[int] = None) -> bool:
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         while not active and self.queue:
@@ -832,17 +908,19 @@ class ServeEngine:
                 None if self.registry is None else self.registry.scaling,
                 self.paged,
                 self.kv_block_size if self.paged else None,
-                getattr(self, "num_blocks", None) if self.paged else None)
+                getattr(self, "num_blocks", None) if self.paged else None,
+                self.mesh)
         theirs = (other.cfg, other.eos_id, other.max_len, other.greedy,
                   other.n_slots, other.registry is None,
                   None if other.registry is None else other.registry.scaling,
                   other.paged,
                   other.kv_block_size if other.paged else None,
-                  getattr(other, "num_blocks", None) if other.paged else None)
+                  getattr(other, "num_blocks", None) if other.paged else None,
+                  other.mesh)
         if mine != theirs:
             raise ValueError(
                 "adopt_compiled: engines differ in (cfg, eos_id, max_len, "
-                f"greedy, n_slots, paged layout): {mine} vs {theirs}")
+                f"greedy, n_slots, paged layout, mesh): {mine} vs {theirs}")
         self._chunk_fns = other._chunk_fns
         self._prefill_cache = other._prefill_cache
         self._writer = other._writer

@@ -31,7 +31,8 @@ jax.config.update("jax_enable_x64", False)
 
 # Test modules whose cases need more than one device (marker applied below
 # so CI lanes can split: -m multi_device / -m "not multi_device").
-_MULTI_DEVICE_MODULES = {"test_distributed", "test_sharding"}
+_MULTI_DEVICE_MODULES = {"test_distributed", "test_sharding",
+                         "test_sharded_serve"}
 
 
 def pytest_configure(config):

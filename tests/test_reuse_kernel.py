@@ -440,3 +440,90 @@ def test_engine_reuse_interpret_smoke():
                           quantize=True, impl="reuse_interpret").generate(
         prompts, max_new=2)
     assert out_mul == out_int
+
+
+# ---------------------------------------------------------------------------
+# 5. ring collectives x reuse path (tensor-parallel serving, PR 7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("gran", ["per_channel", "per_group"])
+def test_ring_allgather_matmul_matches_reuse_bit_exact(
+        eight_cpu_devices, gran):
+    """ring_allgather_matmul on a column-sharded QTensor must equal
+    ops.reuse_matmul on the gathered operand BIT-FOR-BIT in the dyadic
+    regime: the ring splits K into per-device blocks, each block runs the
+    same reuse arithmetic, and the f32 block sums stay exact (partial
+    sums < 2^24 * 2^-e), so the changed association cannot round."""
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collective_matmul import ring_allgather_matmul
+
+    mesh = jax.make_mesh((4,), ("model",),
+                         devices=eight_cpu_devices[:4])
+    rng, x = _int_x(3)
+    codes = rng.integers(-127, 128, size=(K, N)).astype(np.int8)
+    if gran == "per_group":
+        g = 128
+        scale = np.full((K // g, 1, N), 127.0 * 2.0 ** -3, np.float32)
+    else:
+        scale = np.full((1, N), 127.0 * 2.0 ** -3, np.float32)
+    qt = _qtensor(codes, scale, 8, "affine", granularity=gran)
+    y_ref, _ = ops.reuse_matmul(x, qt, impl="reuse_ref")
+
+    # shard_map moves the raw leaves; the local QTensor shard (full K
+    # rows, N/4 columns) is rebuilt inside the body
+    scale_spec = P(None, None, "model") if gran == "per_group" \
+        else P(None, "model")
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(None, "model"), P(None, "model"), scale_spec),
+             out_specs=P(None, "model"))
+    def ring(x_l, codes_l, scale_l):
+        w_l = QTensor(codes=codes_l, scale=scale_l, codebook=None,
+                      bits=8, mode="affine", granularity=gran,
+                      group_size=128, packed=False,
+                      shape=(K, codes_l.shape[-1]))
+        return ring_allgather_matmul(x_l, w_l, "model", impl="reuse_ref")
+
+    y = ring(x, qt.codes, qt.scale)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+@pytest.mark.multi_device
+def test_ring_reducescatter_matmul_matches_reuse_bit_exact(
+        eight_cpu_devices):
+    """The row-parallel half: x column-sharded, W row-sharded, output
+    reduce-scattered over N — still bit-exact vs the gathered reuse
+    matmul in the dyadic regime (per-shard partials are exact dyadics)."""
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collective_matmul import ring_matmul_reducescatter
+
+    mesh = jax.make_mesh((4,), ("model",),
+                         devices=eight_cpu_devices[:4])
+    rng, x = _int_x(4)
+    codes = rng.integers(-127, 128, size=(K, N)).astype(np.int8)
+    qt = _qtensor(codes, np.full((1, N), 127.0 * 2.0 ** -3, np.float32),
+                  8, "affine")
+    y_ref, _ = ops.reuse_matmul(x, qt, impl="reuse_ref")
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(None, "model"), P("model", None), P(None, None)),
+             out_specs=P(None, "model"))
+    def ring(x_l, codes_l, scale_l):
+        w_l = QTensor(codes=codes_l, scale=scale_l, codebook=None,
+                      bits=8, mode="affine", granularity="per_channel",
+                      group_size=128, packed=False,
+                      shape=codes_l.shape)
+        return ring_matmul_reducescatter(x_l, w_l, "model",
+                                         impl="reuse_ref")
+
+    y = ring(x, qt.codes, qt.scale)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))

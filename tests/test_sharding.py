@@ -97,3 +97,73 @@ def test_shard_is_identity_outside_mesh():
     x = jnp.ones((4, 4))
     y = shd.shard(x, "batch", "mlp")
     np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# PR 7 serving-mesh helpers
+# ---------------------------------------------------------------------------
+
+def test_size1_mesh_axes_skipped():
+    # a (1, 1) mesh must resolve everything to replication: the engine's
+    # mesh=1 path has to compile the exact single-device program
+    class FakeMesh:
+        shape = {"data": 1, "model": 1}
+    spec = shd.resolve_spec((256, 4096), ("batch", "mlp"), FakeMesh, RULES)
+    assert spec == P(None, None)
+
+
+def test_size1_axis_skipped_within_multi_axis_mesh():
+    class FakeMesh:
+        shape = {"data": 1, "model": 8}
+    spec = shd.resolve_spec((256, 4096), ("batch", "mlp"), FakeMesh, RULES)
+    assert spec == P(None, "model")
+
+
+def test_row_parallel_wo_down_names():
+    # Megatron split: wo/down shard the CONTRACTION dim ("mlp") so each
+    # block needs exactly one all-reduce, on the block output
+    assert shd._param_names("wo", 3) == (None, "mlp", "embed")
+    assert shd._param_names("down", 3) == (None, "mlp", "embed")
+    # column-parallel partners keep the output dim sharded
+    assert shd._param_names("wq", 3)[-1] == "mlp"
+    assert shd._param_names("gate", 3)[-1] == "mlp"
+
+
+def test_serve_rules_for_picks_head_vs_seq():
+    class Mesh2:
+        shape = {"data": 1, "model": 2}
+
+    class Mesh8:
+        shape = {"data": 1, "model": 8}
+    # n_kv_heads=2: divides model=2 -> head-sharded (cache_seq None)
+    assert shd.serve_rules_for(Mesh2, 2)["cache_seq"] is None
+    assert shd.serve_rules_for(Mesh2, 2)["kv_heads"] == "model"
+    # 2 % 8 != 0 -> fall back to sequence sharding
+    assert shd.serve_rules_for(Mesh8, 2)["cache_seq"] == "model"
+
+
+def test_adapter_specs_structure(mesh11):
+    from repro.core.axllm_linear import LoRAConfig
+    from repro.serve.adapters import AdapterRegistry
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, dtype="float32")
+    reg = AdapterRegistry(cfg, LoRAConfig(rank=4, targets=("wq", "wo")))
+    specs = shd.adapter_specs(reg.stacked, mesh11)
+    jax.tree_util.tree_map(lambda a, s: None, reg.stacked, specs)
+    # A replicated, B sharded on its last (output) dim name-wise
+    for t in ("wq", "wo"):
+        assert specs[t]["lora_a"].spec == P()
+
+
+def test_paged_cache_specs_structure(mesh11):
+    from repro.configs.base import ModelConfig
+    from repro.models.model import get_model
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, vocab_pad_multiple=64, dtype="float32")
+    api = get_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_paged_cache(4, 8, 8, 4))
+    specs = shd.paged_cache_specs(cache, mesh11)
+    jax.tree_util.tree_map(lambda a, s: None, cache, specs)
