@@ -36,6 +36,15 @@ the decode hot path:
     compiles to the same program at size 1. Sizes beyond the device count
     record a "skipped" row instead of failing.
 
+  - open-loop arrivals (``open_loop`` rows): requests arrive on a Poisson
+    clock (``--arrival poisson:<rate>``) decoupled from completions. The
+    ``steady`` row offers ~60% of measured capacity and records p50/p99
+    TTFT and inter-token latency; the ``overload`` row offers 3x capacity
+    into a bounded queue under the reject admission policy with mixed
+    priorities and a queue-wait deadline, recording the shed counters
+    (rejected / expired / preempted) alongside the tail latencies —
+    check_bench gates the steady p99 TTFT against a ceiling.
+
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
 
 CI runs --smoke on every push and uploads the JSON artifact, so the serving
@@ -198,12 +207,104 @@ def _serve_shared_prefix(cfg, params, sp: dict, n_slots: int, paged: bool):
     }
 
 
+def _pct(a) -> dict:
+    """p50/p99 summary of a latency sample (rounded, None when empty)."""
+    if not len(a):
+        return {"p50": None, "p99": None}
+    return {"p50": round(float(np.percentile(a, 50)), 4),
+            "p99": round(float(np.percentile(a, 99)), 4)}
+
+
+def _serve_open_loop(cfg, params, p, spec: str, label: str,
+                     admission: str = "block", max_queue=None,
+                     deadline_s=None, priorities=(0,), warm=None):
+    """Open-loop arrivals: requests land on their own (Poisson or fixed)
+    clock regardless of engine backlog, so queueing delay and shedding
+    become visible — a closed-loop driver that only submits when slots
+    free up can never overload the engine. Reports TTFT and
+    inter-token-latency percentiles from the engine's per-request
+    timestamps plus the rejected/expired/preempted shed counts."""
+    from repro.serve.engine import ServeEngine
+    from repro.serve.scheduler import arrival_times
+
+    rng = np.random.default_rng(2)
+    lens = p["prompt_lens"]
+    n = p["requests"]
+    prompts = [rng.integers(0, cfg.vocab_size, size=lens[i % len(lens)])
+               .astype(np.int32) for i in range(n)]
+    at = arrival_times(spec, n, seed=3)
+
+    def make():
+        return ServeEngine(cfg, params, n_slots=p["n_slots"],
+                           max_len=p["max_len"], quantize=True,
+                           decode_chunk=8, paged=True, kv_block_size=16,
+                           max_queue=max_queue, admission=admission)
+
+    if warm is None:
+        warm = make()
+        for pr in prompts:
+            warm.submit(pr, max_new=p["max_new"])
+        warm.run()
+        # open-loop arrivals trickle in, so prefill waves smaller than a
+        # full slot set occur; compile those (wave, padded_len) buckets
+        # outside the timed run (the closed-loop warmup only sees full
+        # waves)
+        for wave in range(1, p["n_slots"]):
+            for ln in dict.fromkeys(lens):
+                for _ in range(wave):
+                    warm.submit(rng.integers(0, cfg.vocab_size, size=ln)
+                                .astype(np.int32), max_new=2)
+                warm.run()
+    eng = make().adopt_compiled(warm)
+    i = 0
+    t0 = time.perf_counter()
+    while True:
+        now = time.perf_counter() - t0
+        while i < n and at[i] <= now:
+            eng.submit(prompts[i], max_new=p["max_new"],
+                       priority=priorities[i % len(priorities)],
+                       deadline_s=deadline_s)
+            i += 1
+        if eng.step():
+            continue
+        if i >= n:
+            break
+        # drained before the next arrival: idle until it lands
+        time.sleep(min(0.002, max(0.0, at[i] - (time.perf_counter() - t0))))
+    wall = time.perf_counter() - t0
+    done = [r for r in eng.finished
+            if r.finish_reason not in ("rejected", "expired")]
+    ttft = [r.t_first - r.t_submit for r in done if r.t_first is not None]
+    itl = [(r.t_last - r.t_first) / (len(r.tokens) - 1) for r in done
+           if r.t_first is not None and r.t_last is not None
+           and len(r.tokens) > 1]
+    toks = sum(len(r.tokens) for r in done)
+    st = eng.stats
+    return {
+        "arrival": spec,
+        "admission": admission,
+        "max_queue": max_queue,
+        "deadline_s": deadline_s,
+        "wall_s": round(wall, 4),
+        "generated_tokens": toks,
+        "tokens_per_sec": round(toks / wall, 2) if wall else 0.0,
+        "completed": len(done),
+        "rejected": st.rejected,
+        "expired": st.expired,
+        "preempted": st.preempted,
+        "restored": st.restored,
+        "fast_restores": st.fast_restores,
+        "ttft_s": _pct(ttft),
+        "inter_token_s": _pct(itl),
+    }, warm
+
+
 #: mesh sizes the meshN rows run at (1xN "data"/"model" host meshes)
 MESH_SIZES = (1, 2, 8)
 
 
 def bench(smoke: bool = True, requests: int = None, prompt_pool=None,
-          mesh_sizes=MESH_SIZES) -> dict:
+          mesh_sizes=MESH_SIZES, arrival: str = None) -> dict:
     from repro.launch.mesh import force_host_device_count, make_host_mesh
 
     # before the first jax computation: the CPU host-device forcing only
@@ -260,6 +361,28 @@ def bench(smoke: bool = True, requests: int = None, prompt_pool=None,
         "base_tokens_per_sec": t_base,
         "overhead_vs_base": round(t_base / t_lora, 3) if t_lora else 0.0,
     }
+    # open-loop arrivals on the paged int8/chunk8 engine. "steady" offers
+    # ~60% of the measured closed-loop capacity (queueing stays bounded,
+    # TTFT percentiles are meaningful); "overload" offers 3x capacity into
+    # a bounded queue under the reject policy with mixed priorities and a
+    # queue-wait deadline, so the shed counters (rejected / expired /
+    # preempted) and tail latencies show the admission-control behavior.
+    cap_tok_s = report["modes"]["axllm-int8/chunk8/paged"]["tokens_per_sec"]
+    cap_rps = cap_tok_s / p["max_new"] if cap_tok_s else 1.0
+    p_ol = dict(p, requests=max(p["requests"], 4 * p["n_slots"]))
+    steady_spec = arrival or f"poisson:{round(0.6 * cap_rps, 3)}"
+    steady, warm_ol = _serve_open_loop(cfg, params, p_ol, steady_spec,
+                                       "steady")
+    over, _ = _serve_open_loop(
+        cfg, params, p_ol, f"poisson:{round(3.0 * cap_rps, 3)}", "overload",
+        admission="reject", max_queue=p["n_slots"],
+        deadline_s=round(2.0 / cap_rps, 3), priorities=(0, 9),
+        warm=warm_ol)
+    report["open_loop"] = {
+        "capacity_rps_estimate": round(cap_rps, 3),
+        "steady": steady,
+        "overload": over,
+    }
     # shared-prefix workload: paged + prefix reuse vs dense on the same
     # stream — the acceptance bar is >= 1.5x effective prefill throughput
     sp = p["shared_prefix"]
@@ -299,6 +422,12 @@ def run():
     rows.append(("serve/shared_prefix/prefill_speedup", 0.0,
                  f"{sp['prefill_speedup']}x eff-prefill; "
                  f"hits={sp['paged']['prefix_hit_tokens']}"))
+    for key in ("steady", "overload"):
+        r = rep["open_loop"][key]
+        rows.append((f"serve/open_loop/{key}", 0.0,
+                     f"{r['arrival']} ttft_p99={r['ttft_s']['p99']}s "
+                     f"rej={r['rejected']} exp={r['expired']} "
+                     f"pre={r['preempted']}"))
     return rows
 
 
@@ -317,13 +446,21 @@ def main(argv=None):
     ap.add_argument("--mesh", default=",".join(map(str, MESH_SIZES)),
                     help="comma list of tensor-parallel mesh sizes for the "
                          "meshN rows (empty string disables them)")
+    ap.add_argument("--arrival", default=None,
+                    help="open-loop arrival process for the steady row, "
+                         "'poisson:<rate>' or 'fixed:<rate>' in requests/s "
+                         "(default: poisson at 60%% of measured capacity); "
+                         "the overload row always offers 3x capacity")
     args = ap.parse_args(argv)
+    if args.arrival:
+        from repro.serve.scheduler import parse_arrival
+        parse_arrival(args.arrival)      # fail fast on a bad spec
     pool = None
     if args.prompt_pool:
         pool = tuple(int(x) for x in args.prompt_pool.split(",") if x)
     sizes = tuple(int(x) for x in args.mesh.split(",") if x)
     rep = bench(smoke=args.smoke, requests=args.requests, prompt_pool=pool,
-                mesh_sizes=sizes)
+                mesh_sizes=sizes, arrival=args.arrival)
     rep["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     with open(args.out, "w") as f:
         json.dump(rep, f, indent=2, sort_keys=True)
@@ -341,6 +478,14 @@ def main(argv=None):
     ml = rep["multi_lora"]
     print(f"multi-LoRA (2 adapters) overhead vs base-only: "
           f"{ml['overhead_vs_base']}x tok/s")
+    for key in ("steady", "overload"):
+        r = rep["open_loop"][key]
+        print(f"open-loop [{key}] {r['arrival']}: "
+              f"{r['completed']} completed, ttft p50/p99 "
+              f"{r['ttft_s']['p50']}/{r['ttft_s']['p99']}s, itl p50/p99 "
+              f"{r['inter_token_s']['p50']}/{r['inter_token_s']['p99']}s, "
+              f"rejected={r['rejected']} expired={r['expired']} "
+              f"preempted={r['preempted']}")
     sp = rep["shared_prefix"]
     print(f"shared-prefix: paged effective prefill "
           f"{sp['paged']['effective_prefill_tok_s']} tok/s vs dense "

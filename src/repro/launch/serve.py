@@ -38,6 +38,10 @@ Flags of note:
                     single-device. Sizes > 1 on CPU force host devices
                     (see launch/mesh.py); sharded decode is
                     token-identical to single-device
+  --arrival-rate A  open-loop arrivals ('poisson:<r>' / 'fixed:<r>'
+                    requests/s) instead of submitting everything up front;
+                    pairs with --admission/--max-queue/--priority/
+                    --deadline-s for overload behavior
   --stats           print the engine's scheduler stats as JSON
                     (admitted/finished/truncated, tokens/step, occupancy)
 
@@ -159,6 +163,25 @@ def main(argv=None):
                     help="tensor-parallel serving mesh: model-axis size "
                          "('8') or 'DATAxMODEL' ('2x4'); '1' (default) "
                          "serves single-device")
+    ap.add_argument("--arrival-rate", default=None,
+                    help="open-loop arrivals: 'poisson:<rate>' or "
+                         "'fixed:<rate>' requests/s submitted on their own "
+                         "clock (default: closed-loop, all requests "
+                         "submitted up front)")
+    ap.add_argument("--admission", choices=("block", "reject", "evict"),
+                    default="block",
+                    help="policy when the wait queue is full: block the "
+                         "submitter, reject the newcomer, or evict the "
+                         "lowest-priority queued request")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="wait-queue bound that arms --admission "
+                         "(default: unbounded)")
+    ap.add_argument("--priority", default="0",
+                    help="comma list of priorities cycled over requests "
+                         "(higher preempts lower under overload)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="queue-wait deadline per request; requests not "
+                         "admitted in time finish as 'expired'")
     ap.add_argument("--stats", action="store_true",
                     help="print scheduler stats JSON after the run")
     ap.add_argument("--set", action="append", default=[])
@@ -214,7 +237,8 @@ def main(argv=None):
                       fuse_qkv=args.fuse_qkv, adapters=registry,
                       paged=args.paged, kv_block_size=args.kv_block_size,
                       num_blocks=args.num_blocks,
-                      prefix_cache=args.prefix_cache, mesh=mesh)
+                      prefix_cache=args.prefix_cache, mesh=mesh,
+                      max_queue=args.max_queue, admission=args.admission)
     rng = np.random.default_rng(0)
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -222,9 +246,31 @@ def main(argv=None):
                for i in range(args.requests)]
     adapters = [adapter_cycle[i % len(adapter_cycle)]
                 for i in range(args.requests)]
+    prios = [int(x) for x in args.priority.split(",") if x] or [0]
     t0 = time.time()
-    reqs = eng.generate(prompts, max_new=args.max_new, return_requests=True,
-                        adapters=adapters)
+    if args.arrival_rate:
+        # open-loop: requests land on their own clock; the engine keeps
+        # stepping between arrivals and sheds per --admission/--deadline-s
+        from repro.serve.scheduler import arrival_times
+        at = arrival_times(args.arrival_rate, len(prompts))
+        i = 0
+        while True:
+            now = time.time() - t0
+            while i < len(prompts) and at[i] <= now:
+                eng.submit(prompts[i], max_new=args.max_new,
+                           adapter=adapters[i],
+                           priority=prios[i % len(prios)],
+                           deadline_s=args.deadline_s)
+                i += 1
+            if eng.step():
+                continue
+            if i >= len(prompts):
+                break
+            time.sleep(min(0.002, max(0.0, at[i] - (time.time() - t0))))
+        reqs = list(eng.finished)
+    else:
+        reqs = eng.generate(prompts, max_new=args.max_new,
+                            return_requests=True, adapters=adapters)
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in reqs)
     bits = cfg.quant_bits if args.quant_bits is None else args.quant_bits
@@ -238,6 +284,12 @@ def main(argv=None):
           f"{toks/dt:.1f} tok/s, occupancy "
           f"{eng.stats.mean_occupancy:.2f}{lora_tag}{mesh_tag} "
           f"(host fallback path)")
+    if args.arrival_rate:
+        st = eng.stats
+        print(f"  open-loop [{args.arrival_rate}, admission="
+              f"{args.admission}]: rejected={st.rejected} "
+              f"expired={st.expired} preempted={st.preempted} "
+              f"restored={st.restored} ({st.fast_restores} fast)")
     if args.paged:
         print(f"  paged: {eng.stats.prefix_hit_tokens} prefix-hit tokens, "
               f"{eng.stats.blocks_in_use} blocks cached, "

@@ -1,0 +1,456 @@
+"""Serving fault-injection harness (the `train/fault_tolerance.py` of
+the serving stack).
+
+Each scenario drives a `ServeEngine` through a specific failure mode —
+pool exhaustion, prefix-eviction storms, injected dispatch faults,
+bursty priority arrivals against a bounded queue, adapter evict races —
+and then *audits* the engine against two invariants the robustness
+layer guarantees:
+
+1. **Zero lost requests.** Every submitted request finishes exactly once
+   with a ``finish_reason`` (generation / rejected / expired); the
+   engine ends drained (no slots held, no queue, no leaked pool blocks,
+   no adapter pins) and the pager's refcount/free-list bookkeeping
+   passes ``check_consistency`` after every step.
+2. **Zero corrupted requests.** Every request that finished with a
+   generation reason produced tokens *bit-identical* to a fault-free
+   reference run of the same prompt — including requests that were
+   preempted, swapped out, and restored mid-decode.
+
+Faults are injected three ways, all deterministic:
+
+- :class:`ServeFailureInjector` — the engine's ``fault_hook``; raises
+  ``RuntimeError`` at chosen dispatch ordinals, right before the jitted
+  prefill/decode call (mirrors ``FailureInjector`` in
+  `repro.train.fault_tolerance`). The driver retries the step, which
+  must be a clean no-op-replay (admission rolled back and requeued,
+  decode pager commit idempotent).
+- :class:`BlockThief` — allocates pool blocks that belong to no slot and
+  no index entry, emulating pressure the LRU eviction cannot relieve;
+  admission must *defer* and decode planning must *preempt* instead of
+  corrupting state, and everything restores once the thief returns the
+  blocks.
+- The scenario script itself: eviction storms (``evict_prefixes``),
+  burst arrivals with mixed priorities/deadlines against a small
+  ``max_queue``, and `AdapterRegistry.evict` calls racing in-flight
+  LoRA requests.
+
+Run the CI smoke lane with ``python -m repro.serve.chaos --smoke``;
+``--scenario NAME`` runs one scenario, default runs all. Exit status is
+non-zero on any invariant violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import sys
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import get_model
+from repro.serve.engine import ServeEngine
+
+CFG = ModelConfig(name="chaos", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, vocab_pad_multiple=64, dtype="float32")
+
+#: default chaos workload: mixed lengths, shared-prefix pairs
+WORKLOAD = [np.arange(8), np.arange(12) + 3, np.arange(31) + 7,
+            np.arange(12) + 40, np.arange(8) + 60, np.arange(31) + 90,
+            np.arange(20) + 11, np.arange(9) + 120]
+
+MAX_NEW = 6
+MAX_LEN = 64
+BLOCK = 8
+
+
+class ServeFailureInjector:
+    """Engine ``fault_hook`` raising at chosen dispatch ordinals.
+
+    ``fail_at`` counts calls across the selected ``phases`` ("prefill" /
+    "decode"); each listed ordinal raises once. The raise happens before
+    the jitted dispatch, where the engine guarantees rollback."""
+
+    def __init__(self, fail_at=(), phases=("prefill", "decode")):
+        self.remaining = set(fail_at)
+        self.phases = set(phases)
+        self.calls = 0
+        self.raised = 0
+
+    def __call__(self, phase: str):
+        if phase not in self.phases:
+            return
+        self.calls += 1
+        if self.calls in self.remaining:
+            self.remaining.discard(self.calls)
+            self.raised += 1
+            raise RuntimeError(
+                f"injected {phase} fault at dispatch {self.calls}")
+
+
+class BlockThief:
+    """Steals pool blocks for a window of steps.
+
+    Stolen blocks have no slot and no index entry, so they are invisible
+    to LRU eviction — from the engine's view the pool genuinely shrank
+    (fragmentation, a co-tenant, a leak). Admission must defer and
+    decode planning must preempt while the window lasts."""
+
+    def __init__(self, steal: int, hold_steps: int, start_step: int = 1):
+        self.steal = steal
+        self.hold_steps = hold_steps
+        self.start_step = start_step
+        self.step = 0
+        self.held: List[int] = []
+
+    def on_step(self, eng: ServeEngine):
+        self.step += 1
+        if self.step == self.start_step:
+            # take the whole free list (not the index: stealing must not
+            # itself evict). Progress stays possible because preemption
+            # and prefix eviction keep returning blocks to the free list.
+            for _ in range(min(self.steal, len(eng.pager._free))):
+                self.held.append(eng.pager.alloc())
+        if self.step == self.start_step + self.hold_steps:
+            self.release(eng)
+
+    def release(self, eng: ServeEngine):
+        for b in self.held:
+            eng.pager._release_block(b)
+        self.held = []
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    scenario: str
+    submitted: int = 0
+    finished: int = 0                 # generation outcomes
+    rejected: int = 0
+    expired: int = 0
+    preempted: int = 0
+    restored: int = 0
+    fast_restores: int = 0
+    faults_injected: int = 0
+    step_retries: int = 0
+    lost: int = 0                     # submitted but unaccounted-for
+    mismatched: int = 0               # tokens differ from fault-free run
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return self.lost == 0 and self.mismatched == 0 and not self.errors
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ok"] = self.ok
+        return d
+
+
+def _params():
+    return get_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _reference(params, prompts, max_new=MAX_NEW, **kw) -> List[list]:
+    """Fault-free tokens for ``prompts`` on a roomy engine."""
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=MAX_LEN, **kw)
+    return eng.generate(prompts, max_new=max_new)
+
+
+def _drive(eng: ServeEngine, report: ChaosReport,
+           post_step: Optional[Callable] = None,
+           thief: Optional[BlockThief] = None,
+           max_retries: int = 200) -> None:
+    """Run the engine to drain, retrying steps killed by injected faults
+    (anything else propagates — a real bug, not chaos)."""
+    while True:
+        try:
+            while eng.step():
+                if post_step is not None:
+                    post_step(eng)
+                if eng.paged:
+                    eng.pager.check_consistency(
+                        external=thief.held if thief else ())
+            return
+        except RuntimeError as e:
+            if "injected" not in str(e):
+                raise
+            report.step_retries += 1
+            if report.step_retries > max_retries:
+                raise
+
+
+def _audit(eng: ServeEngine, rid_to_prompt: Dict[int, int],
+           reference: List[list], report: ChaosReport) -> None:
+    """Check the zero-lost / zero-corrupted invariants post-drain."""
+    st = eng.stats
+    report.finished = st.finished
+    report.rejected = st.rejected
+    report.expired = st.expired
+    report.preempted = st.preempted
+    report.restored = st.restored
+    report.fast_restores = st.fast_restores
+    seen = {}
+    for r in eng.finished:
+        if r.rid in seen:
+            report.errors.append(f"rid {r.rid} finished twice")
+        seen[r.rid] = r
+    report.lost = len(set(rid_to_prompt) - set(seen))
+    if report.lost:
+        report.errors.append(f"{report.lost} request(s) never finished")
+    for rid, r in seen.items():
+        if r.finish_reason is None:
+            report.errors.append(f"rid {rid} finished without a reason")
+        if r.finish_reason in ("rejected", "expired"):
+            if r.tokens:
+                report.errors.append(
+                    f"rid {rid} was {r.finish_reason} but has tokens")
+            continue
+        want = reference[rid_to_prompt[rid]]
+        if r.tokens != want:
+            report.mismatched += 1
+            report.errors.append(
+                f"rid {rid} tokens {r.tokens} != fault-free {want}"
+                + (f" (preempted {r.preemptions}x)" if r.preemptions
+                   else ""))
+    if any(s is not None for s in eng.slots):
+        report.errors.append("slots still held after drain")
+    if eng.queue:
+        report.errors.append("queue non-empty after drain")
+    if eng.paged:
+        eng.pager.check_consistency()
+        for slot in range(eng.n_slots):
+            if eng.pager.slot_blocks(slot):
+                report.errors.append(f"slot {slot} leaked pool blocks")
+    if eng.registry is not None and any(eng.registry._refs):
+        report.errors.append(f"adapter pins leaked: "
+                             f"{list(eng.registry._refs)}")
+
+
+def _submit_all(eng, prompts, report, **kw) -> Dict[int, int]:
+    rid_to_prompt = {}
+    for i, p in enumerate(prompts):
+        rid_to_prompt[eng.submit(p, MAX_NEW, **kw)] = i
+        report.submitted += 1
+    return rid_to_prompt
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+def scenario_pool_exhaustion(params, smoke: bool) -> ChaosReport:
+    """A thief drains the free list mid-serve: admission defers, decode
+    planning preempts victims (swap-out), and everything restores
+    token-identically once blocks return."""
+    report = ChaosReport("pool_exhaustion")
+    prompts = WORKLOAD[:6] if smoke else WORKLOAD
+    reference = _reference(params, prompts)
+    # decode_chunk=1 keeps requests in flight across steps so the
+    # pressure window actually catches them mid-decode
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=MAX_LEN, paged=True,
+                      kv_block_size=BLOCK, decode_chunk=1)
+    # steal essentially the whole free list for several steps
+    thief = BlockThief(steal=10_000, hold_steps=6)
+    rid_to_prompt = _submit_all(eng, prompts, report)
+    try:
+        _drive(eng, report, post_step=thief.on_step, thief=thief)
+    finally:
+        thief.release(eng)
+    _drive(eng, report)               # drain anything deferred at the end
+    _audit(eng, rid_to_prompt, reference, report)
+    if report.preempted == 0 and report.errors == []:
+        # the thief must actually bite or the scenario tests nothing
+        report.errors.append("pool pressure never triggered a preemption "
+                             "or deferral (thief too weak?)")
+    return report
+
+
+def scenario_eviction_storm(params, smoke: bool) -> ChaosReport:
+    """Every cached prefix is evicted after every step, so preempted
+    requests can never fast-restore — the recompute path must still be
+    token-identical."""
+    report = ChaosReport("eviction_storm")
+    prompts = WORKLOAD[:6] if smoke else WORKLOAD
+    reference = _reference(params, prompts)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=MAX_LEN, paged=True,
+                      kv_block_size=BLOCK, decode_chunk=1)
+    thief = BlockThief(steal=10_000, hold_steps=6)
+
+    def storm(e):
+        thief.on_step(e)
+        e.pager.evict_prefixes()      # kill every index-only block
+
+    rid_to_prompt = _submit_all(eng, prompts, report)
+    try:
+        _drive(eng, report, post_step=storm, thief=thief)
+    finally:
+        thief.release(eng)
+    _drive(eng, report)
+    _audit(eng, rid_to_prompt, reference, report)
+    if report.fast_restores:
+        report.errors.append("fast restore should be impossible under a "
+                             "full eviction storm")
+    if report.preempted == 0 and report.errors == []:
+        report.errors.append("the storm never forced a preemption")
+    return report
+
+
+def scenario_dispatch_faults(params, smoke: bool) -> ChaosReport:
+    """RuntimeError right before jitted prefill/decode dispatches: every
+    faulted step must retry cleanly (admission rolled back + requeued,
+    decode commit idempotent) with no lost work."""
+    report = ChaosReport("dispatch_faults")
+    prompts = WORKLOAD[:6] if smoke else WORKLOAD
+    reference = _reference(params, prompts)
+    inj = ServeFailureInjector(fail_at=(1, 3, 4, 7))
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=MAX_LEN, paged=True,
+                      kv_block_size=BLOCK, fault_hook=inj)
+    rid_to_prompt = _submit_all(eng, prompts, report)
+    _drive(eng, report)
+    report.faults_injected = inj.raised
+    _audit(eng, rid_to_prompt, reference, report)
+    if inj.raised == 0:
+        report.errors.append("no fault was ever injected")
+    return report
+
+
+def scenario_burst_arrivals(params, smoke: bool) -> ChaosReport:
+    """Bursts against a bounded queue with mixed priorities and
+    deadlines (virtual clock): low-priority work is evicted/expired in a
+    controlled way, high-priority arrivals preempt running slots, and
+    whatever finishes is token-identical."""
+    report = ChaosReport("burst_arrivals")
+    prompts = WORKLOAD[:6] if smoke else WORKLOAD
+    reference = _reference(params, prompts)
+    clock = itertools.count(0)        # 1 virtual second per observation
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=MAX_LEN, paged=True,
+                      kv_block_size=BLOCK, max_queue=3, admission="evict",
+                      decode_chunk=1, clock=lambda: float(next(clock)))
+    rid_to_prompt = {}
+    half = len(prompts) // 2
+    # burst 1: low priority, generous deadlines
+    for i, p in enumerate(prompts[:half]):
+        rid = eng.submit(p, MAX_NEW, priority=0, deadline_s=10_000.0)
+        rid_to_prompt[rid] = i
+        report.submitted += 1
+    eng.step()
+    # burst 2: high priority — preempts burst-1 slots, evicts queued ones
+    for i, p in enumerate(prompts[half:]):
+        rid = eng.submit(p, MAX_NEW, priority=5)
+        rid_to_prompt[rid] = half + i
+        report.submitted += 1
+    # one urgent straggler with an already-hopeless deadline: it outranks
+    # everyone (so the evict policy seats it in the full queue) but must
+    # expire at the next admission scan, not run
+    rid = eng.submit(prompts[0], MAX_NEW, priority=9, deadline_s=0.0)
+    rid_to_prompt[rid] = 0
+    report.submitted += 1
+    _drive(eng, report)
+    _audit(eng, rid_to_prompt, reference, report)
+    if report.expired == 0:
+        report.errors.append("the deadline-0 request did not expire")
+    if report.preempted == 0 and report.errors == []:
+        report.errors.append("the high-priority burst never preempted a "
+                             "running low-priority slot")
+    return report
+
+
+def scenario_adapter_race(params, smoke: bool) -> ChaosReport:
+    """`AdapterRegistry.evict` racing in-flight LoRA requests: evicting a
+    pinned adapter must raise (not corrupt), pins must release on finish
+    — including requests that died to an injected prefill fault and were
+    retried — and the evict must succeed after the drain."""
+    from repro.launch.serve import make_synthetic_adapters
+    report = ChaosReport("adapter_race")
+    reg, names = make_synthetic_adapters(CFG, n=2)
+    inj = ServeFailureInjector(fail_at=(2,), phases=("prefill",))
+    # decode_chunk=1 so the first step leaves the slot requests mid-
+    # decode with their pins held — otherwise one chunk finishes them
+    # and there is no race left to exercise
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=MAX_LEN,
+                      quantize=True, adapters=reg, paged=True,
+                      kv_block_size=BLOCK, fault_hook=inj, decode_chunk=1)
+    prompts = [np.arange(8), np.arange(12) + 3, np.arange(8) + 60,
+               np.arange(9) + 120]
+    adapters = [names[0], names[1], names[0], None]
+    ref_reg, ref_names = make_synthetic_adapters(CFG, n=2)
+    ref_eng = ServeEngine(CFG, params, n_slots=4, max_len=MAX_LEN,
+                          quantize=True, adapters=ref_reg)
+    reference = ref_eng.generate(prompts, max_new=MAX_NEW,
+                                 adapters=[None if a is None else
+                                           {names[0]: ref_names[0],
+                                            names[1]: ref_names[1]}[a]
+                                           for a in adapters])
+    rid_to_prompt = {}
+    for i, (p, a) in enumerate(zip(prompts, adapters)):
+        rid_to_prompt[eng.submit(p, MAX_NEW, adapter=a)] = i
+        report.submitted += 1
+    raced = 0
+    try:
+        eng.step()                    # adapters now pinned in-flight
+    except RuntimeError as e:
+        if "injected" not in str(e):
+            raise
+        report.step_retries += 1
+    for name in names:                # the race: evict while pinned
+        try:
+            reg.evict(name)
+            report.errors.append(f"evict({name!r}) succeeded while pinned")
+        except RuntimeError:
+            raced += 1
+    _drive(eng, report)
+    report.faults_injected = inj.raised
+    _audit(eng, rid_to_prompt, reference, report)
+    if raced == 0:
+        report.errors.append("no pinned-evict race was exercised")
+    for name in names:                # pins released: evict is legal now
+        try:
+            reg.evict(name)
+        except RuntimeError as e:
+            report.errors.append(f"evict({name!r}) still pinned after "
+                                 f"drain: {e}")
+    return report
+
+
+SCENARIOS = {
+    "pool_exhaustion": scenario_pool_exhaustion,
+    "eviction_storm": scenario_eviction_storm,
+    "dispatch_faults": scenario_dispatch_faults,
+    "burst_arrivals": scenario_burst_arrivals,
+    "adapter_race": scenario_adapter_race,
+}
+
+
+def run(scenarios=None, smoke: bool = False) -> List[ChaosReport]:
+    params = _params()
+    reports = []
+    for name in scenarios or SCENARIOS:
+        reports.append(SCENARIOS[name](params, smoke))
+    return reports
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="run one scenario (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller workloads (CI lane)")
+    args = ap.parse_args(argv)
+    names = [args.scenario] if args.scenario else None
+    reports = run(names, smoke=args.smoke)
+    print(json.dumps([r.as_dict() for r in reports], indent=2))
+    bad = [r for r in reports if not r.ok]
+    for r in bad:
+        print(f"FAIL {r.scenario}: {'; '.join(r.errors)}", file=sys.stderr)
+    print(f"chaos: {len(reports) - len(bad)}/{len(reports)} scenarios ok")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

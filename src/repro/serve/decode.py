@@ -24,6 +24,13 @@ is masked out and overwritten by the next prefill wave into that slot);
 first False". Token-for-token equivalence with ``n`` sequential
 ``api.decode`` calls is property-tested per family in
 tests/test_decode_steps.py.
+
+Preemption happens only at chunk boundaries: the engine reserves every
+block the *whole* chunk window may touch before dispatching
+(plan-then-commit on the paged pool), so a running scan never hits an
+allocation failure mid-chunk. A slot preempted between chunks has its KV
+swapped out and restored bit-identically — the scan itself never observes
+a half-evicted cache.
 """
 
 from __future__ import annotations

@@ -86,6 +86,30 @@ Scheduler contract
   shared system prompts / few-shot templates prefill once, not per
   request. Paged decode is token-identical to the dense path
   (tests/test_paged.py). Recurrent families reject `paged=True`.
+- **Overload robustness (admission control + preemption).** The wait
+  queue is a bounded priority queue (`repro.serve.scheduler.WaitQueue`):
+  `submit(..., priority=, deadline_s=)` applies the engine's admission
+  policy when it is full (`"block"` backpressure / `"reject"` load
+  shedding / `"evict"` priority shedding — shed requests finish with
+  `finish_reason="rejected"`, nothing raises), and requests whose queue
+  wait exceeds their deadline expire (`"expired"`). When the block pool
+  runs dry mid-flight, or a strictly-higher-priority request is waiting,
+  the engine *preempts* the lowest-priority running slot instead of
+  failing: full KV blocks are published into the radix index and the
+  partial tail block is buffered on host (`SwapState`), the slot's
+  blocks are released, and the request re-enters the queue keeping its
+  original rid. Restore is a fast path (uncapped index `lookup` + tail
+  scatter into a fresh block, straight back to decode) when every full
+  block survived, else a recompute through the normal prefill path on
+  `prompt ++ tokens` — both resume bit-identically to an uninterrupted
+  decode. Admission itself is atomic (`PagedKVCache.admit`,
+  plan-then-commit) and each decode window's block budget is reserved
+  before any pool mutation (`plan_decode`/`can_allocate`), so no
+  exception can leave blocks half-allocated; an engine-level
+  `fault_hook` (see `repro.serve.chaos`) fires right before each jitted
+  prefill/decode dispatch, and any exception there rolls admission back,
+  requeues the wave (adapter pins intact) and leaves the decode step
+  idempotently retryable.
 - **Stats.** `engine.stats` tracks admitted/finished/truncated requests,
   decode steps/tokens, prefill waves/tokens/compiles (plus wall time),
   LoRA-carrying requests, mean slot occupancy and — in paged mode —
@@ -117,6 +141,25 @@ from repro.models.model import ModelAPI, get_model
 from repro.serve.adapters import AdapterRegistry
 from repro.serve.decode import decode_steps
 from repro.serve.paged_cache import PagedKVCache
+from repro.serve.scheduler import WaitQueue, pick_victim
+
+
+@dataclasses.dataclass
+class SwapState:
+    """Host-side remainder of a preempted slot's KV (paged mode).
+
+    Full blocks are published into the radix index at swap-out (base
+    requests), so the swap state only carries what the index cannot:
+    the partial tail block's KV rows, copied to host. A restore first
+    tries the fast path (uncapped index lookup + tail scatter back into
+    a fresh block — no recompute); if any full block was LRU-evicted
+    meanwhile it falls back to recomputing the whole KV through the
+    normal prefill path, which is what dense mode and LoRA requests
+    (whose adapter-specific KV is never indexed) always do.
+    """
+    seq_len: int                      # KV positions covered at swap-out
+    full_blocks: int                  # seq_len // block_size
+    tail: Optional[dict] = None      # pool-leaf name -> host [L, bs, ...]
 
 
 @dataclasses.dataclass
@@ -136,6 +179,15 @@ class Request:
     truncated: bool = False           # generation cut short (cache/steps)
     prompt_truncated: bool = False    # prompt clipped by long_prompt policy
     adapter: Optional[str] = None     # LoRA adapter name (None = base)
+    priority: int = 0                 # larger = admitted first, may preempt
+    deadline_s: Optional[float] = None    # max queue wait before expiry
+    finish_reason: Optional[str] = None   # eos / max_new / cache_full /
+                                          # rejected / expired / cancelled
+    t_submit: float = 0.0             # engine-clock submit time
+    t_first: Optional[float] = None   # first-token time (TTFT base)
+    t_last: Optional[float] = None    # last-token time (ITL base)
+    preemptions: int = 0              # times swapped out of a slot
+    _swap: Optional[SwapState] = None     # host tail KV while preempted
 
 
 @dataclasses.dataclass
@@ -158,6 +210,12 @@ class EngineStats:
     prefix_hit_tokens: int = 0
     blocks_in_use: int = 0
     cow_copies: int = 0
+    # robustness: admission-control and preemption outcomes
+    rejected: int = 0                 # shed by the admission policy
+    expired: int = 0                  # deadline passed while queued
+    preempted: int = 0                # swap-outs of running slots
+    restored: int = 0                 # re-admissions after preemption
+    fast_restores: int = 0            # restores that skipped recompute
 
     @property
     def mean_occupancy(self) -> float:
@@ -255,7 +313,11 @@ class ServeEngine:
                  paged: bool = False, kv_block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
-                 mesh=None):
+                 mesh=None,
+                 max_queue: Optional[int] = None,
+                 admission: str = "block",
+                 clock=None,
+                 fault_hook=None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "ServeEngine drives token-only prefill; encoder-decoder "
@@ -329,7 +391,13 @@ class ServeEngine:
                 mesh, getattr(cfg, "n_kv_heads", 1) or 1)
             self._place_on_mesh()
         self.slots: List[Optional[Request]] = [None] * n_slots
-        self.queue: List[Request] = []
+        # bounded priority wait queue; max_queue=None + "block" reproduces
+        # the pre-robustness unbounded FIFO for closed-loop callers
+        self.queue = WaitQueue(max_queue, admission)
+        # injectable clock (deadlines/TTFT) and fault hook (chaos harness:
+        # called with "prefill"/"decode" right before each jit dispatch)
+        self._clock = time.monotonic if clock is None else clock
+        self.fault_hook = fault_hook
         self.finished: List[Request] = []
         self._rid = 0
         self.stats = EngineStats()
@@ -447,14 +515,27 @@ class ServeEngine:
                     f"{target_dims(self.cfg, t)}")
 
     # -- request management ---------------------------------------------------
+    def _now(self) -> float:
+        return self._clock()
+
     def submit(self, prompt, max_new: int = 32,
-               adapter: Optional[str] = None) -> int:
+               adapter: Optional[str] = None, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         """Queue a prompt ([S] ints) for generation; returns a request id.
 
         adapter: name of a registered LoRA adapter to serve this request
         with (requires the engine's ``adapters=AdapterRegistry``; unknown
         names raise KeyError here, not mid-stream). The adapter is pinned
-        until the request finishes."""
+        until the request finishes.
+
+        priority: larger admits first; a strictly-higher-priority arrival
+        may preempt a running lower-priority slot (swap-out/restore).
+        deadline_s: max seconds the request may *wait in the queue*; past
+        it the request finishes with ``finish_reason="expired"`` and no
+        tokens. When the queue is at ``max_queue`` the engine's admission
+        policy decides: "block" drives ``step()`` until a position frees,
+        "reject" / "evict" shed a request (``finish_reason="rejected"``)
+        without raising — read the outcome off the finished list/stats."""
         if adapter is not None and self.registry is None:
             raise ValueError(
                 "submit(adapter=...) needs an engine built with "
@@ -474,37 +555,174 @@ class ServeEngine:
         if adapter is not None:
             self.registry.acquire(adapter)    # KeyError on unknown name
         req = Request(self._rid, prompt, max_new,
-                      prompt_truncated=prompt_truncated, adapter=adapter)
+                      prompt_truncated=prompt_truncated, adapter=adapter,
+                      priority=priority, deadline_s=deadline_s,
+                      t_submit=self._now())
         self._rid += 1
-        self.queue.append(req)
+        dec = self.queue.offer(req)
+        while dec.must_block:
+            # backpressure: drain the engine until a queue position frees
+            if not self.step():
+                raise RuntimeError(
+                    "admission blocked with a drained engine: the wait "
+                    "queue is full but nothing in it can make progress")
+            dec = self.queue.offer(req)
+        if dec.evicted is not None:
+            self._finish(dec.evicted, "rejected")
+        if not dec.admitted:
+            self._finish(req, "rejected")
         return req.rid
 
     def _free_slots(self):
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    # -- admission sequences ---------------------------------------------------
+    def _admission_seq(self, r: Request) -> np.ndarray:
+        """Tokens a (re-)admission feeds through prefill: the prompt plus
+        everything generated so far. Fresh requests (no tokens yet)
+        prefill just the prompt; a recompute-restored request re-enters
+        with its full generated prefix, so prefill's last-position logits
+        sample exactly the token uninterrupted decode would have."""
+        if not r.tokens:
+            return r.prompt
+        return np.concatenate([r.prompt, np.asarray(r.tokens, np.int32)])
+
+    def _kv_seq(self, r: Request) -> np.ndarray:
+        """Tokens whose KV a running slot currently holds: prompt ++
+        tokens[:-1] (the last sampled token's KV is written by the NEXT
+        decode step). Keys the radix-index publish at finish/swap-out."""
+        return np.concatenate([r.prompt, np.asarray(r.tokens[:-1],
+                                                    np.int32)])
+
+    # -- preemption (swap-out) and restore -------------------------------------
+    def _preempt_slot(self, i: int):
+        """Swap a running request out of slot ``i`` without losing work.
+
+        Paged mode releases the slot's blocks *through the radix index*:
+        full blocks are published keyed by the KV sequence (so a later
+        fast restore — or any other request sharing the prefix — finds
+        them), and the partial tail block's rows are copied to a host
+        swap buffer. Dense mode just abandons the slot rows (restore
+        recomputes). The request re-enters the queue with its original
+        rid, i.e. ahead of its priority class."""
+        r = self.slots[i]
+        if self.paged:
+            seq = self._kv_seq(r)
+            bs = self.kv_block_size
+            full = len(seq) // bs
+            blocks = self.pager.slot_blocks(i)
+            if r.adapter is None and full:
+                self.pager.insert(seq, blocks[:full])
+            tail = None
+            if len(seq) % bs and full < len(blocks):
+                tb = blocks[full]
+                tail = {name: np.asarray(self.cache[name][:, tb])
+                        for name in self._pool_leaves}
+            r._swap = SwapState(seq_len=len(seq), full_blocks=full,
+                                tail=tail)
+            self.pager.release_slot(i)
+            self.stats.blocks_in_use = self.pager.blocks_in_use
+        self.slots[i] = None
+        self.adapter_slots[i] = -1
+        r.preemptions += 1
+        self.stats.preempted += 1
+        self.queue.push_front(r)
+
+    def _try_fast_restore(self, r: Request, slot: int) -> bool:
+        """Re-seat a swapped-out request without recompute: every full KV
+        block must still be in the radix index (uncapped ``lookup``) and
+        the partial tail, if any, in the host swap buffer. On success the
+        slot re-enters decode directly — no prefill dispatch. Returns
+        False (recompute path) if anything was evicted meanwhile."""
+        sw = r._swap
+        if sw is None or not self.paged:
+            return False
+        if r.adapter is not None and sw.full_blocks:
+            return False               # LoRA KV is never in the index
+        hit = self.pager.lookup(self._kv_seq(r)) if sw.full_blocks else []
+        if len(hit) < sw.full_blocks:
+            return False                # prefix (partly) evicted
+        hit = hit[:sw.full_blocks]
+        tail_len = sw.seq_len % self.kv_block_size
+        if tail_len and sw.tail is None:
+            return False
+        if not self.pager.admit(slot, hit, 1 if tail_len else 0):
+            return False                # pool dry even after eviction
+        if tail_len:
+            tb = int(self.pager.tables[slot, sw.full_blocks])
+            for name in self._pool_leaves:
+                self.cache[name] = self.cache[name].at[:, tb].set(
+                    jnp.asarray(sw.tail[name], self.cache[name].dtype))
+        r._swap = None
+        self.slots[slot] = r
+        self.adapter_slots[slot] = (self.registry.index_of(r.adapter)
+                                    if r.adapter is not None else -1)
+        self.stats.restored += 1
+        self.stats.fast_restores += 1
+        return True
+
+    def _priority_preempt(self):
+        """Make room for strictly-higher-priority queued requests: for
+        each waiting request beyond what free slots absorb, preempt the
+        lowest-priority running slot strictly below it (never an equal —
+        two peers must not thrash)."""
+        if not self.queue:
+            return
+        nfree = len(self._free_slots())
+        waiting = sorted(self.queue,
+                         key=lambda q: (-q.priority, q.rid))[nfree:]
+        for req in waiting:
+            victim = pick_victim(self.slots, below_priority=req.priority)
+            if victim is None:
+                break
+            self._preempt_slot(victim)
+
     # -- prefill waves ---------------------------------------------------------
     def _admit(self):
+        for r in self.queue.expire(self._now()):
+            self._finish(r, "expired")
+        self._priority_preempt()
         free = self._free_slots()
         if not free or not self.queue:
             return
-        take = self.queue[: len(free)]
-        del self.queue[: len(take)]
+        take = self.queue.take(len(free))
+        pending = []
+        for r in take:
+            if self.paged and r._swap is not None and free \
+                    and self._try_fast_restore(r, free[0]):
+                free.pop(0)
+                continue
+            pending.append(r)
+        if not pending:
+            return
         if self.api.ragged_prefill:
-            groups = [take]
+            groups = [pending]
         else:
             by_len = {}
-            for r in take:
-                by_len.setdefault(len(r.prompt), []).append(r)
+            for r in pending:
+                by_len.setdefault(len(self._admission_seq(r)), []).append(r)
             groups = list(by_len.values())
         t0 = time.perf_counter()
-        for group in groups:
-            if self.paged:
-                self._prefill_group_paged(group, free)
-            else:
-                self._prefill_group(group, free)
-        jax.block_until_ready(self.cache["k"] if "k" in self.cache
-                              else jax.tree_util.tree_leaves(self.cache)[0])
-        self.stats.prefill_wall_s += time.perf_counter() - t0
+        gi = -1
+        try:
+            for gi, group in enumerate(groups):
+                if self.paged:
+                    self._prefill_group_paged(group, free)
+                else:
+                    self._prefill_group(group, free)
+            jax.block_until_ready(
+                self.cache["k"] if "k" in self.cache
+                else jax.tree_util.tree_leaves(self.cache)[0])
+        except Exception:
+            # the failing group requeued itself (its prefill handler owns
+            # rollback); untouched later groups must requeue here or
+            # they'd be lost with their adapter pins held forever
+            for group in groups[gi + 1:]:
+                for r in group:
+                    self.queue.push_front(r)
+            raise
+        finally:
+            self.stats.prefill_wall_s += time.perf_counter() - t0
 
     def _get_prefill(self, wave_bucket: int, padded_len: int):
         """Jitted prefill for one (wave, padded_len) bucket. With an
@@ -538,7 +756,8 @@ class ServeEngine:
     def _prefill_group(self, group: List[Request], free: List[int]):
         w = len(group)
         wb = _pow2_bucket(w, 1, self.n_slots)
-        lens = [len(r.prompt) for r in group]
+        seqs = [self._admission_seq(r) for r in group]
+        lens = [len(s) for s in seqs]
         if self.api.ragged_prefill:
             pl = _pow2_bucket(max(lens), min(8, self.max_len), self.max_len)
         else:
@@ -546,30 +765,47 @@ class ServeEngine:
         toks = np.zeros((wb, pl), np.int32)
         lengths = np.ones((wb,), np.int32)
         aidx = np.full((wb,), -1, np.int32)
-        for i, r in enumerate(group):
-            toks[i, : len(r.prompt)] = r.prompt
-            lengths[i] = len(r.prompt)
+        for i, (r, seq) in enumerate(zip(group, seqs)):
+            toks[i, : len(seq)] = seq
+            lengths[i] = len(seq)
             if r.adapter is not None:
                 aidx[i] = self.registry.index_of(r.adapter)
         fn = self._get_prefill(wb, pl)
-        if self.registry is not None:
-            logits, wave_cache = fn(self.params, jnp.asarray(toks),
-                                    jnp.asarray(lengths),
-                                    self.registry.stacked,
-                                    jnp.asarray(aidx))
-        else:
-            logits, wave_cache = fn(self.params, jnp.asarray(toks),
-                                    jnp.asarray(lengths))
+        try:
+            if self.fault_hook is not None:
+                self.fault_hook("prefill")
+            if self.registry is not None:
+                logits, wave_cache = fn(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lengths),
+                                        self.registry.stacked,
+                                        jnp.asarray(aidx))
+            else:
+                logits, wave_cache = fn(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lengths))
+        except Exception:
+            # nothing was mutated yet (no slot/cache writes): requeue the
+            # whole group so no request — or its adapter pin — is lost
+            for r in group:
+                self.queue.push_front(r)
+            raise
         first = self._sample(logits)
+        now = self._now()
         src, dst = [], []
         for i, r in enumerate(group):
             r.tokens.append(int(first[i]))
-            self.stats.admitted += 1
+            if r.t_first is None:
+                r.t_first = now
+                self.stats.admitted += 1
+                if r.adapter is not None:
+                    self.stats.lora_requests += 1
+            else:
+                self.stats.restored += 1    # recompute restore
+            r.t_last = now
+            r._swap = None
             self.stats.prefill_tokens += int(lengths[i])
-            if r.adapter is not None:
-                self.stats.lora_requests += 1
-            if self._stop_reason(r) is not None:
-                self._finish(r)           # EOS/max_new on the first token
+            reason = self._stop_reason(r)
+            if reason is not None:
+                self._finish(r, reason)   # EOS/max_new on the first token
                 continue
             slot = free.pop(0)
             self.slots[slot] = r
@@ -645,29 +881,46 @@ class ServeEngine:
         return self._prefill_cache[key]
 
     def _prefill_group_paged(self, group: List[Request], free: List[int]):
-        """Admit one wave through the paged pool: match each prompt's
+        """Admit one wave through the paged pool: match each sequence's
         longest cached full-block prefix in the radix index, allocate
         blocks for the un-cached suffix, prefill ONLY the suffix (rows
-        position-offset by their hit), and publish the prompt's full
-        blocks back into the index so later requests reuse them."""
+        position-offset by their hit), and publish the sequence's full
+        blocks back into the index so later requests reuse them.
+
+        Admission is atomic per request (``pager.admit``, plan-then-
+        commit): a request the pool cannot hold — even after LRU
+        eviction — is *deferred* back to the queue with zero blocks
+        held, never half-admitted. Deferral, not preemption: blocks come
+        back when a running slot finishes, and preempting here would
+        thrash (the victim would immediately compete for the same
+        blocks). An exception during the prefill dispatch rolls every
+        admitted request's blocks back and requeues the wave."""
         pgr, bs = self.pager, self.kv_block_size
-        w = len(group)
-        wb = _pow2_bucket(w, 1, self.n_slots)
-        slots_for = free[:w]            # slots are assigned up front: block
-        hits, hit_toks = [], []         # ownership needs a table to live in
-        for r, slot in zip(group, slots_for):
+        admitted, slots_for = [], []    # slots are assigned up front: block
+        seqs, hits, hit_toks = [], [], []   # ownership needs a table
+        for r in group:
+            seq = self._admission_seq(r)
             # LoRA requests bypass the prefix index: adapters targeting
             # wk/wv make the KV adapter-specific, so sharing it across
             # adapters (or with the base model) would be silently wrong
-            hit, ht = pgr.match(r.prompt) if r.adapter is None else ([], 0)
-            pgr.acquire_blocks(slot, hit)        # before any alloc can evict
-            for _ in range(math.ceil((len(r.prompt) - ht) / bs)):
-                pgr.append_block(slot)
+            hit, ht = pgr.match(seq) if r.adapter is None else ([], 0)
+            slot = free[0]
+            if not pgr.admit(slot, hit, math.ceil((len(seq) - ht) / bs)):
+                self.queue.push_front(r)     # defer: pool dry right now
+                continue
+            free.pop(0)
+            admitted.append(r)
+            slots_for.append(slot)
+            seqs.append(seq)
             hits.append(hit)
             hit_toks.append(ht)
+        if not admitted:
+            return
+        w = len(admitted)
+        wb = _pow2_bucket(w, 1, self.n_slots)
         max_ctx = self.max_blocks * bs
-        pl = _pow2_bucket(max(len(r.prompt) - ht
-                              for r, ht in zip(group, hit_toks)),
+        pl = _pow2_bucket(max(len(s) - ht
+                              for s, ht in zip(seqs, hit_toks)),
                           bs, max_ctx)
         npb_max = max((len(h) for h in hits), default=0)
         npb = _pow2_bucket(npb_max, 1, self.max_blocks) if npb_max else 0
@@ -677,8 +930,8 @@ class ServeEngine:
         pbt = np.zeros((wb, max(npb, 1)), np.int32)
         sbt = np.zeros((wb, pl // bs), np.int32)
         aidx = np.full((wb,), -1, np.int32)
-        for i, (r, slot) in enumerate(zip(group, slots_for)):
-            suffix = r.prompt[hit_toks[i]:]
+        for i, (r, slot) in enumerate(zip(admitted, slots_for)):
+            suffix = seqs[i][hit_toks[i]:]
             toks[i, : len(suffix)] = suffix
             lengths[i] = len(suffix)
             prefix_len[i] = hit_toks[i]
@@ -694,27 +947,46 @@ class ServeEngine:
                 jnp.asarray(pbt), jnp.asarray(sbt)]
         if self.registry is not None:
             args += [self.registry.stacked, jnp.asarray(aidx)]
-        logits, self.cache = fn(*args)
+        try:
+            if self.fault_hook is not None:
+                self.fault_hook("prefill")
+            logits, self.cache = fn(*args)
+        except Exception:
+            # roll the wave back: every admitted request's blocks return
+            # to the pool and the requests (pins intact) requeue
+            for r, slot in zip(admitted, slots_for):
+                pgr.release_slot(slot)
+                self.queue.push_front(r)
+            self.stats.blocks_in_use = pgr.blocks_in_use
+            raise
         first = self._sample(logits)
-        for i, (r, slot) in enumerate(zip(group, slots_for)):
+        now = self._now()
+        for i, (r, slot) in enumerate(zip(admitted, slots_for)):
             r.tokens.append(int(first[i]))
-            self.stats.admitted += 1
+            if r.t_first is None:
+                r.t_first = now
+                self.stats.admitted += 1
+                if r.adapter is not None:
+                    self.stats.lora_requests += 1
+            else:
+                self.stats.restored += 1    # recompute restore
+            r.t_last = now
+            r._swap = None
             self.stats.prefill_tokens += int(lengths[i])
             self.stats.prefix_hit_tokens += hit_toks[i]
-            if r.adapter is not None:
-                self.stats.lora_requests += 1
-            # publish the prompt's full blocks now: requests in later waves
-            # reuse this prefill while the slot is still decoding (base
-            # model only — LoRA KV is adapter-specific, see above)
+            # publish the sequence's full blocks now: requests in later
+            # waves reuse this prefill while the slot is still decoding
+            # (base model only — LoRA KV is adapter-specific, see above)
             if r.adapter is None:
-                pgr.insert(r.prompt, pgr.slot_blocks(slot))
-            if self._stop_reason(r) is not None:
+                pgr.insert(seqs[i], pgr.slot_blocks(slot))
+            reason = self._stop_reason(r)
+            if reason is not None:
                 pgr.release_slot(slot)
-                self._finish(r)           # EOS/max_new on the first token
+                self._finish(r, reason)   # EOS/max_new on the first token
+                free.append(slot)         # reusable by the next group
                 continue
             self.slots[slot] = r
             self.adapter_slots[slot] = aidx[i]
-            free.remove(slot)
         self.stats.prefill_waves += 1
         self.stats.blocks_in_use = pgr.blocks_in_use
 
@@ -737,11 +1009,23 @@ class ServeEngine:
             return "cache_full"
         return None
 
-    def _finish(self, r: Request):
+    def _finish(self, r: Request, reason: str):
+        """Terminal bookkeeping for every outcome. ``finished`` (the list)
+        holds all of them; ``stats.finished`` counts only generation
+        outcomes (eos/max_new/cache_full) — rejected/expired requests
+        produced no tokens and are tallied separately."""
         r.done = True
+        r.finish_reason = reason
+        r._swap = None
         if r.adapter is not None:
             self.registry.release(r.adapter)   # unpin: evict becomes legal
         self.finished.append(r)
+        if reason == "rejected":
+            self.stats.rejected += 1
+            return
+        if reason == "expired":
+            self.stats.expired += 1
+            return
         self.stats.finished += 1
         if r.truncated:
             self.stats.truncated += 1
@@ -793,38 +1077,81 @@ class ServeEngine:
         with self._mesh_ctx():
             return self._step(max_n)
 
+    def _chunk_len(self, active, max_n: Optional[int]) -> int:
+        """Decode chunk length: largest per-slot remaining budget, clamped
+        to decode_chunk and the caller's step budget."""
+        remaining = 1
+        for i in active:
+            r = self.slots[i]
+            # slot i can emit at most this many more tokens (max_new and
+            # cache-capacity bounds; the scan wastes nothing past the wave)
+            rem = min(r.max_new - len(r.tokens),
+                      self.max_len - (len(r.prompt) + len(r.tokens) - 1))
+            remaining = max(remaining, rem)
+        return max(1, min(self.decode_chunk, remaining,
+                          max_n if max_n is not None else remaining))
+
     def _step(self, max_n: Optional[int] = None) -> bool:
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         while not active and self.queue:
             # a whole wave can finish at prefill (EOS/max_new on the first
             # token); keep admitting so queued work is never stranded
+            before = (len(self.queue), len(self.finished),
+                      self.stats.restored)
             self._admit()
             active = [i for i, s in enumerate(self.slots) if s is not None]
+            if not active and before == (len(self.queue),
+                                         len(self.finished),
+                                         self.stats.restored):
+                # every slot is free yet nothing admits, finishes, or
+                # expires: the pool can never fit the queued requests —
+                # a sizing bug, not a transient overload
+                raise RuntimeError(
+                    f"admission stalled: {len(self.queue)} queued "
+                    f"request(s) cannot fit an empty engine "
+                    f"(num_blocks={getattr(self, 'num_blocks', None)})")
         if not active:
             return False
+        n = self._chunk_len(active, max_n)
+        if self.paged:
+            # plan -> commit: reserve the whole write window's block
+            # budget before touching the pool, preempting the lowest-
+            # priority slot while the window cannot fit. A single slot
+            # always fits (pool >= per-slot max + trash), so this
+            # terminates with at least one runner.
+            while len(active) > 1:
+                need = 0
+                for i in active:
+                    r = self.slots[i]
+                    pos0 = len(r.prompt) + len(r.tokens) - 1
+                    rem = min(r.max_new - len(r.tokens),
+                              self.max_len - pos0)
+                    a, c = self.pager.plan_decode(i, pos0,
+                                                  max(1, min(n, rem)))
+                    need += a + c
+                if self.pager.can_allocate(need):
+                    break
+                self._preempt_slot(pick_victim(self.slots))
+                active = [i for i, s in enumerate(self.slots)
+                          if s is not None]
+                n = self._chunk_len(active, max_n)
         last = np.zeros((self.n_slots,), np.int32)
         gen = np.zeros((self.n_slots,), np.int32)
         budget = np.zeros((self.n_slots,), np.int32)
         stop = np.ones((self.n_slots,), bool)
-        remaining = 1
         for i in active:
             r = self.slots[i]
             last[i] = r.tokens[-1]
             gen[i] = len(r.tokens)
             budget[i] = r.max_new
             stop[i] = False
-            # slot i can emit at most this many more tokens (max_new and
-            # cache-capacity bounds; the scan wastes nothing past the wave)
-            rem = min(r.max_new - len(r.tokens),
-                      self.max_len - (len(r.prompt) + len(r.tokens) - 1))
-            remaining = max(remaining, rem)
-        n = max(1, min(self.decode_chunk, remaining,
-                       max_n if max_n is not None else remaining))
         if self.paged:
             # make every active slot's write window [pos, pos+n) backed by
             # uniquely owned blocks: append fresh blocks past the table end
-            # and copy-on-write any shared block, in ONE batched device copy
+            # and copy-on-write any shared block, in ONE batched device
+            # copy. Planned above, so allocation cannot fail halfway; a
+            # re-run after a decode-phase fault is a no-op (idempotent).
             cow = []
             pos_host = np.zeros((self.n_slots,), np.int32)
             for i in active:
@@ -847,6 +1174,10 @@ class ServeEngine:
             self.cache["block_tables"] = jnp.asarray(self.pager.tables)
             self.stats.blocks_in_use = self.pager.blocks_in_use
         fn = self._get_chunk_fn(n)
+        if self.fault_hook is not None:
+            # after the (idempotent) pager commit, before the dispatch:
+            # a fault here leaves the step cleanly retryable
+            self.fault_hook("decode")
         if self.registry is not None:
             out = fn(self.params, self.registry.stacked,
                      jnp.asarray(self.adapter_slots), jnp.asarray(last),
@@ -863,13 +1194,19 @@ class ServeEngine:
         self.stats.decode_chunks += 1
         self.stats.decode_tokens += int(valid.sum())
         self.stats.occupancy_sum += float(valid.sum()) / self.n_slots
+        now = self._now()
         for i in active:
             r = self.slots[i]
+            got = 0
             for t in range(n):
                 if not valid[t, i]:
                     break
                 r.tokens.append(int(toks[t, i]))
-            if self._stop_reason(r) is not None:
+                got += 1
+            if got:
+                r.t_last = now
+            reason = self._stop_reason(r)
+            if reason is not None:
                 if self.paged:
                     # publish the generated tokens' full blocks too (KV at
                     # position p is keyed by prompt ++ tokens[:-1], the
@@ -877,11 +1214,10 @@ class ServeEngine:
                     # indexed blocks stay cached for future requests.
                     # LoRA rows stay unindexed (adapter-specific KV).
                     if r.adapter is None:
-                        seq = np.concatenate(
-                            [r.prompt, np.asarray(r.tokens[:-1], np.int32)])
-                        self.pager.insert(seq, self.pager.slot_blocks(i))
+                        self.pager.insert(self._kv_seq(r),
+                                          self.pager.slot_blocks(i))
                     self.pager.release_slot(i)
-                self._finish(r)
+                self._finish(r, reason)
                 self.slots[i] = None
                 self.adapter_slots[i] = -1
         if self.paged:
@@ -947,10 +1283,21 @@ class ServeEngine:
             raise ValueError(f"adapters list length {len(adapters)} != "
                              f"{len(prompts)} prompts")
         start = len(self.finished)
-        ids = [self.submit(p, max_new, adapter=a)
-               for p, a in zip(prompts, adapters)]
+        ids = []
+        try:
+            for p, a in zip(prompts, adapters):
+                ids.append(self.submit(p, max_new, adapter=a))
+            self.run(max_steps)
+        except Exception:
+            # leave the engine clean behind the propagating error: every
+            # still-queued/running request from this call releases its
+            # slot, pool blocks and adapter pins (the pin-leak fix)
+            resolved = {r.rid for r in self.finished[start:]}
+            for rid in ids:
+                if rid not in resolved:
+                    self._cancel(rid)
+            raise
         want = set(ids)
-        self.run(max_steps)
         new = self.finished[start:]
         by_id = {r.rid: r for r in new}
         out = []
@@ -976,6 +1323,8 @@ class ServeEngine:
                 if s.adapter is not None:
                     self.registry.release(s.adapter)
                 s.truncated = True
+                s.finish_reason = "cancelled"
+                s._swap = None
                 self.stats.truncated += 1
                 return s
         for r in self.queue:
@@ -984,6 +1333,8 @@ class ServeEngine:
                 if r.adapter is not None:
                     self.registry.release(r.adapter)
                 r.truncated = True
+                r.finish_reason = "cancelled"
+                r._swap = None
                 self.stats.truncated += 1
                 return r
         raise KeyError(f"request {rid} not found")

@@ -38,6 +38,17 @@ never inside a jitted step:
   evicted in LRU order. Blocks referenced by live slots are never evicted,
   so sizing the pool at ``n_slots * max_blocks_per_slot`` unique blocks
   (+ trash + one copy-on-write spare) guarantees allocation never fails.
+- **Plan-then-commit admission.** :meth:`admit` is the transactional
+  entry the engine uses: it acquires a request's prefix hits and
+  allocates its suffix blocks *atomically* — if the pool cannot supply
+  the full plan, everything taken so far is rolled back and the slot
+  table is left exactly as before, so an overloaded admission becomes a
+  clean "defer or preempt" decision instead of a mid-wave
+  ``RuntimeError`` with blocks leaked into a half-built table.
+  :meth:`plan_decode` / :meth:`can_allocate` give the engine the same
+  guarantee for decode write-windows: count what a chunk needs without
+  mutating, check it against ``free + evictable``, and only then commit
+  (preempting victims first when the answer is no).
 
 Partial blocks are never indexed or matched: a hit is always a whole
 number of blocks, and is additionally capped at ``len(prompt) - 1`` so
@@ -145,6 +156,47 @@ class PagedKVCache:
         self._release_block(best.block)
         self.evictions += 1
 
+    def evictable_blocks(self) -> int:
+        """Blocks the index could surrender under pressure.
+
+        A node is reclaimable iff it is index-only (refcount 1) and its
+        whole subtree is too — an interior node above a slot-referenced
+        descendant can never become a leaf, so it (and its ancestors)
+        are pinned. ``free + evictable`` is therefore the true
+        allocation capacity :meth:`can_allocate` checks against.
+        """
+        def freeable(node: _RadixNode) -> Tuple[bool, int]:
+            ok, count = True, 0
+            for child in node.children.values():
+                c_ok, c_count = freeable(child)
+                count += c_count
+                ok = ok and c_ok
+            if node is self._root:
+                return ok, count
+            if ok and self._ref[node.block] == 1:
+                return True, count + 1
+            return False, count
+
+        return freeable(self._root)[1]
+
+    def can_allocate(self, n: int) -> bool:
+        """Whether ``n`` fresh blocks can be produced (free + evictable)."""
+        return len(self._free) + self.evictable_blocks() >= n
+
+    def evict_prefixes(self, n: Optional[int] = None) -> int:
+        """Force-evict up to ``n`` cached prefix blocks (all when None).
+
+        Returns the number evicted. Used by the chaos harness's
+        eviction-storm fault and by operators that want to drop the
+        index wholesale (e.g. after a model hot-swap)."""
+        done = 0
+        while n is None or done < n:
+            if self.evictable_blocks() == 0:
+                break
+            self._evict_one()
+            done += 1
+        return done
+
     # -- radix prefix index --------------------------------------------------
     def _chunks(self, tokens: Sequence[int]):
         bs = self.block_size
@@ -174,6 +226,26 @@ class PagedKVCache:
             hit.append(child.block)
             node = child
         return hit, len(hit) * self.block_size
+
+    def lookup(self, tokens: Sequence[int]) -> List[int]:
+        """Uncapped full-chunk walk: block ids covering every complete
+        ``block_size`` chunk of ``tokens`` still present in the index.
+
+        Unlike :meth:`match` there is no ``len - 1`` cap — this is the
+        swap-in path's query ("are ALL of a preempted request's full
+        blocks still cached?"), not a prefill plan. Stops at the first
+        missing chunk; touches LRU clocks like a match does."""
+        if not self.prefix_cache:
+            return []
+        node, hit = self._root, []
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            child.last_used = next(self._clock)
+            hit.append(child.block)
+            node = child
+        return hit
 
     def insert(self, tokens: Sequence[int], block_ids: Sequence[int]) -> int:
         """Publish ``tokens``' full blocks (backed by ``block_ids``, one
@@ -220,6 +292,49 @@ class PagedKVCache:
         self._slot_len[slot] = j + 1
         return bid
 
+    def admit(self, slot: int, hit_blocks: Sequence[int], n_new: int) -> bool:
+        """Atomically start ``slot`` with ``hit_blocks`` + ``n_new`` fresh
+        blocks — all of it or none of it.
+
+        Returns False (with the slot table and every refcount exactly as
+        before) when the pool cannot supply ``n_new`` blocks even after
+        evicting cached prefixes; the engine then defers or preempts
+        instead of crashing mid-wave. Prefix evictions performed before
+        the failure are not undone — they only shrink the cache, never
+        corrupt it. This is the plan-then-commit fix for
+        ``alloc()``/``append_block()`` raising with blocks already
+        acquired (the refcounts they had taken used to leak).
+        """
+        if n_new > self.max_blocks - len(hit_blocks):
+            return False
+        self.acquire_blocks(slot, hit_blocks)
+        try:
+            for _ in range(n_new):
+                self.append_block(slot)
+        except RuntimeError:
+            self.release_slot(slot)         # rolls back hits + fresh blocks
+            return False
+        return True
+
+    def plan_decode(self, slot: int, pos0: int, n: int) -> Tuple[int, int]:
+        """Read-only twin of :meth:`prepare_decode`: how many fresh blocks
+        the write window ``[pos0, pos0 + n)`` needs as ``(appends, cows)``.
+
+        The engine sums this over all active slots and checks
+        :meth:`can_allocate` BEFORE committing anything, so a decode
+        chunk either has its whole block budget reserved or preempts a
+        victim first — allocation can never fail halfway through a step.
+        """
+        appends = cows = 0
+        first = pos0 // self.block_size
+        last = min((pos0 + n - 1) // self.block_size, self.max_blocks - 1)
+        for j in range(first, last + 1):
+            if j >= self._slot_len[slot]:
+                appends += 1
+            elif self._ref[int(self.tables[slot, j])] > 1:
+                cows += 1
+        return appends, cows
+
     def release_slot(self, slot: int):
         """Drop a slot's references; index-published blocks stay cached."""
         for j in range(int(self._slot_len[slot])):
@@ -255,3 +370,47 @@ class PagedKVCache:
                 self.tables[slot, j] = new
                 self._release_block(bid)
         return cow
+
+    # -- invariants (chaos harness / tests) ----------------------------------
+    def check_consistency(self, external: Sequence[int] = ()) -> None:
+        """Assert the allocator's books balance; raises AssertionError.
+
+        Recomputes every block's expected refcount from the slot tables
+        plus the radix index and compares against ``_ref``, checks the
+        free list holds exactly the zero-ref blocks (trash excluded) with
+        no duplicates, and that no freed block is referenced by a live
+        slot table or index node. ``external`` names blocks alloc'd by
+        an outside owner (the chaos harness's BlockThief) that carry one
+        ref with no slot/index entry. The chaos harness calls this after
+        every injected fault — any leak or double-free the rollback
+        paths miss shows up here, not as silent corruption later.
+        """
+        want = np.zeros((self.n_blocks,), np.int64)
+        want[TRASH_BLOCK] = 1
+        for b in external:
+            want[b] += 1
+        for slot in range(self.n_slots):
+            for j in range(int(self._slot_len[slot])):
+                want[int(self.tables[slot, j])] += 1
+            # beyond the allocated prefix, tables must point at trash
+            for j in range(int(self._slot_len[slot]), self.max_blocks):
+                assert self.tables[slot, j] == TRASH_BLOCK, (
+                    f"slot {slot} entry {j} is {self.tables[slot, j]} past "
+                    f"its allocated length {int(self._slot_len[slot])}")
+        stack = list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            want[node.block] += 1
+        mismatch = [(b, int(self._ref[b]), int(want[b]))
+                    for b in range(self.n_blocks) if self._ref[b] != want[b]]
+        assert not mismatch, (
+            f"refcount drift (block, have, want): {mismatch[:8]}")
+        free = list(self._free)
+        assert len(free) == len(set(free)), "free list holds duplicates"
+        assert TRASH_BLOCK not in free, "trash block leaked into free list"
+        for b in free:
+            assert want[b] == 0, f"free block {b} still referenced"
+        n_zero = int((want[1:] == 0).sum())
+        assert n_zero == len(free), (
+            f"{n_zero} zero-ref blocks but {len(free)} free-listed")

@@ -1,0 +1,245 @@
+"""Admission control for the serving engine: the bounded wait queue,
+overload policies, and open-loop arrival processes.
+
+Everything here is host-side request bookkeeping — the layer the
+ROADMAP's heavy-traffic scenario was missing. The engine used to hold a
+plain unbounded FIFO list: all requests arrived at once, nothing bounded
+how long one could wait, and overload surfaced as a ``RuntimeError``
+from the block pool mid-step. This module gives `ServeEngine` the three
+standard levers (Sarathi/vLLM lineage — "Inference Optimizations for
+LLMs" names scheduling as a serving bottleneck):
+
+- **Bounded queue + admission policy.** ``WaitQueue(max_queue=...)``
+  caps how many requests may wait. When full, ``submit()`` applies one
+  of three policies (:data:`ADMISSION_POLICIES`):
+
+  * ``"block"`` — backpressure: the engine drives ``step()`` until a
+    queue position frees (the open-loop analogue of a full TCP accept
+    queue: the *caller* slows down).
+  * ``"reject"`` — load shedding: the request is finished immediately
+    with ``finish_reason="rejected"`` (zero tokens). Nothing raises;
+    the caller reads the outcome off the returned request/stats.
+  * ``"evict"`` — priority shedding: the lowest-priority (then
+    youngest) *queued* request with strictly lower priority than the
+    newcomer is rejected to make room; a newcomer that outranks nobody
+    is itself rejected.
+
+- **Priorities + deadlines.** The queue admits in ``(priority desc,
+  rid asc)`` order — a stable sort, so equal priorities stay FIFO and a
+  preempted request (which keeps its original rid) re-enters ahead of
+  its priority class. ``deadline_s`` bounds *queue wait*: a request
+  still queued ``deadline_s`` seconds after submission expires
+  (``finish_reason="expired"``) instead of occupying the queue forever.
+  Deadlines are checked against the engine's injectable ``clock`` so
+  tests and the chaos harness can drive virtual time.
+
+- **Victim selection.** :func:`pick_victim` chooses which *running*
+  slot to preempt (lowest priority, then youngest rid) when the block
+  pool runs dry or a strictly-higher-priority request is waiting — the
+  swap-out/restore mechanics live in the engine.
+
+- **Arrival processes.** :func:`arrival_times` turns a spec string into
+  a deterministic open-loop arrival schedule for benchmarks and the
+  launcher:
+
+  >>> list(arrival_times("fixed:4", 3))
+  [0.25, 0.5, 0.75]
+  >>> parse_arrival("poisson:8")
+  ('poisson', 8.0)
+  >>> len(arrival_times("poisson:100", 5, seed=1))
+  5
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: submit() behaviors when the wait queue is at max_queue
+ADMISSION_POLICIES = ("block", "reject", "evict")
+
+
+@dataclasses.dataclass
+class QueueDecision:
+    """Outcome of offering a request to a full-capable queue."""
+    admitted: bool                 # the offered request entered the queue
+    evicted: Optional[object] = None   # queued request shed to make room
+    must_block: bool = False       # queue full under "block": caller drains
+
+
+class WaitQueue:
+    """Bounded, priority-ordered wait queue for `ServeEngine`.
+
+    ``max_queue=None`` (default) is unbounded — the pre-robustness
+    engine behavior, and what closed-loop tests use. The queue stores
+    engine ``Request`` objects and reads only their ``rid``,
+    ``priority``, ``deadline_s`` and ``t_submit`` attributes.
+    """
+
+    def __init__(self, max_queue: Optional[int] = None,
+                 policy: str = "block"):
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(f"admission policy must be one of "
+                             f"{ADMISSION_POLICIES}, got {policy!r}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.max_queue = max_queue
+        self.policy = policy
+        self._items: List[object] = []
+
+    # -- list-like surface (serve_bench reads len(engine.queue)) -----------
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    @property
+    def full(self) -> bool:
+        return self.max_queue is not None and len(self._items) >= \
+            self.max_queue
+
+    # -- admission ---------------------------------------------------------
+    def offer(self, req) -> QueueDecision:
+        """Apply the admission policy to ``req``.
+
+        Returns a :class:`QueueDecision`; on ``admitted=True`` the
+        request is in the queue. ``must_block=True`` (policy "block",
+        queue full) means the caller must drain the engine and re-offer
+        — the queue itself never busy-waits. An ``evicted`` request has
+        been *removed* from the queue; the caller owns finishing it.
+        """
+        if not self.full:
+            self._items.append(req)
+            return QueueDecision(admitted=True)
+        if self.policy == "block":
+            return QueueDecision(admitted=False, must_block=True)
+        if self.policy == "reject":
+            return QueueDecision(admitted=False)
+        # evict: shed the lowest-priority, youngest strictly-lower rival
+        victim_i = None
+        for i, r in enumerate(self._items):
+            if r.priority >= req.priority:
+                continue
+            if victim_i is None:
+                victim_i = i
+                continue
+            v = self._items[victim_i]
+            if (r.priority, -r.rid) < (v.priority, -v.rid):
+                victim_i = i
+        if victim_i is None:
+            return QueueDecision(admitted=False)   # newcomer outranks nobody
+        victim = self._items.pop(victim_i)
+        self._items.append(req)
+        return QueueDecision(admitted=True, evicted=victim)
+
+    def push_front(self, req) -> None:
+        """Unconditionally requeue (deferred admission / preemption).
+
+        Bypasses ``max_queue``: the request was already admitted once,
+        so bouncing it against the bound would *lose* it."""
+        self._items.append(req)
+
+    # -- draining ----------------------------------------------------------
+    def _order(self) -> None:
+        # stable: equal priorities keep FIFO (rid) order, and a preempted
+        # request's original rid puts it ahead of its priority class
+        self._items.sort(key=lambda r: (-r.priority, r.rid))
+
+    def expire(self, now: float) -> List[object]:
+        """Remove and return every queued request past its deadline."""
+        dead = [r for r in self._items
+                if r.deadline_s is not None
+                and now - r.t_submit > r.deadline_s]
+        if dead:
+            gone = set(id(r) for r in dead)
+            self._items = [r for r in self._items if id(r) not in gone]
+        return dead
+
+    def take(self, k: int) -> List[object]:
+        """Pop up to ``k`` requests in admission order."""
+        if k <= 0 or not self._items:
+            return []
+        self._order()
+        taken, self._items = self._items[:k], self._items[k:]
+        return taken
+
+    def peek_priority(self) -> Optional[int]:
+        """Highest queued priority (None when empty)."""
+        if not self._items:
+            return None
+        return max(r.priority for r in self._items)
+
+    def remove(self, req) -> bool:
+        try:
+            self._items.remove(req)
+            return True
+        except ValueError:
+            return False
+
+
+def pick_victim(slots: Sequence[object],
+                below_priority: Optional[int] = None) -> Optional[int]:
+    """Index of the running slot to preempt, or None.
+
+    Victims are chosen lowest-priority first, then youngest (largest
+    rid) — the request that has consumed the least service and delays
+    the fewest others when rolled back. ``below_priority`` restricts to
+    slots *strictly* below that priority (priority preemption must
+    never preempt an equal — that would thrash two peers forever).
+    ``slots`` entries are engine Requests or None (free slots skipped).
+    """
+    best = None
+    for i, r in enumerate(slots):
+        if r is None:
+            continue
+        if below_priority is not None and r.priority >= below_priority:
+            continue
+        if best is None:
+            best = i
+            continue
+        b = slots[best]
+        if (r.priority, -r.rid) < (b.priority, -b.rid):
+            best = i
+    return best
+
+
+# -- open-loop arrival processes -------------------------------------------
+
+def parse_arrival(spec: str) -> Tuple[str, float]:
+    """Parse an arrival spec ``"poisson:<rate>"`` / ``"fixed:<rate>"``.
+
+    Rates are requests/second. Raises ValueError on anything else.
+
+    >>> parse_arrival("fixed:2.5")
+    ('fixed', 2.5)
+    """
+    kind, sep, val = spec.partition(":")
+    if not sep or kind not in ("poisson", "fixed"):
+        raise ValueError(
+            f"arrival spec must be 'poisson:<rate>' or 'fixed:<rate>', "
+            f"got {spec!r}")
+    rate = float(val)
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    return kind, rate
+
+
+def arrival_times(spec: str, n: int, seed: int = 0) -> List[float]:
+    """``n`` deterministic arrival offsets (seconds) for ``spec``.
+
+    ``fixed:r`` spaces arrivals exactly ``1/r`` apart; ``poisson:r``
+    draws i.i.d. exponential inter-arrival gaps with mean ``1/r`` from
+    a seeded generator, so a benchmark's offered load is reproducible.
+    """
+    kind, rate = parse_arrival(spec)
+    if kind == "fixed":
+        return [(i + 1) / rate for i in range(n)]
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return list(np.cumsum(gaps))

@@ -9,7 +9,10 @@ run) because CI runners are slower and noisier than dev machines — the
 gate exists to catch structural regressions (a dispatch sneaking back into
 the decode hot loop, a donation lost, an accidental recompile per step),
 not single-digit jitter. The shared-prefix prefill speedup is gated as a
-*ratio*, which is machine-independent.
+*ratio*, which is machine-independent. ``ceilings`` entries gate
+latency-style metrics from above — the open-loop steady p99 TTFT must not
+drift past its ceiling (+20% grace), catching admission/preemption paths
+that start stalling requests.
 
 The kernel side gates ``BENCH_kernel.json`` (when present) against
 ``benchmarks/kernel_floors.json``. Kernel rows carry {impl, backend, units}
@@ -60,9 +63,7 @@ def check(bench_path: pathlib.Path) -> list:
             errors.append(f"{mode}: {got:.1f} tok/s is >20% below the "
                           f"checked-in floor {floor}")
     for name, floor in floors.get("ratios", {}).items():
-        got = fresh
-        for key in name.split("."):
-            got = got.get(key, {}) if isinstance(got, dict) else {}
+        got = _lookup(fresh, name)
         if not isinstance(got, (int, float)):
             errors.append(f"ratio {name!r} missing from {bench_path.name}")
             continue
@@ -70,7 +71,30 @@ def check(bench_path: pathlib.Path) -> list:
         print(f"  {name}: {got} vs floor {floor} {verdict}")
         if got < floor:
             errors.append(f"{name}: {got} fell below its floor {floor}")
+    # ceilings bound latency-style metrics from above (e.g. the open-loop
+    # steady p99 TTFT): a value drifting past ceiling*(1+GRACE) means the
+    # admission/preemption path started stalling requests
+    for name, ceiling in floors.get("ceilings", {}).items():
+        got = _lookup(fresh, name)
+        if not isinstance(got, (int, float)):
+            errors.append(f"ceiling {name!r} missing from {bench_path.name}")
+            continue
+        bar = ceiling * (1.0 + GRACE)
+        verdict = "OK" if got <= bar else "FAIL"
+        print(f"  {name}: {got} vs ceiling {ceiling} (bar {bar:.4g}) "
+              f"{verdict}")
+        if got > bar:
+            errors.append(f"{name}: {got} is >20% above the checked-in "
+                          f"ceiling {ceiling}")
     return errors
+
+
+def _lookup(report: dict, dotted: str):
+    """Walk a dotted path ('open_loop.steady.ttft_s.p99') into the report."""
+    got = report
+    for key in dotted.split("."):
+        got = got.get(key, {}) if isinstance(got, dict) else {}
+    return got
 
 
 def _kernel_rows(report: dict) -> dict:
