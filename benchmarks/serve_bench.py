@@ -299,6 +299,64 @@ def _serve_open_loop(cfg, params, p, spec: str, label: str,
     }, warm
 
 
+def _serve_speculative(cfg, params, p, spec_k: int = 4,
+                       draft_bits: int = 4):
+    """Self-speculative decoding row: the int8/chunk8 target engine with an
+    int4 draft proposing ``spec_k`` tokens per round, against the same
+    target-only engine on the identical request stream. Greedy speculative
+    decoding is bit-identical to target-only greedy by construction, so
+    ``identical_output`` doubles as a provenance tag — a False here means
+    the accept/rollback path is broken, not that the workload drifted."""
+    from repro.serve.engine import ServeEngine
+
+    def submit_stream(eng):
+        rng = np.random.default_rng(0)
+        lens = p["prompt_lens"]
+        for i in range(p["requests"]):
+            eng.submit(rng.integers(0, cfg.vocab_size,
+                                    size=lens[i % len(lens)])
+                       .astype(np.int32), max_new=p["max_new"])
+
+    def make(speculate):
+        kw = dict(speculate=True, spec_k=spec_k,
+                  draft_bits=draft_bits) if speculate else {}
+        return ServeEngine(cfg, params, n_slots=p["n_slots"],
+                           max_len=p["max_len"], quantize=True,
+                           decode_chunk=8, **kw)
+
+    def run_timed(speculate):
+        warm = make(speculate)
+        submit_stream(warm)
+        warm.run()
+        eng = make(speculate).adopt_compiled(warm)
+        submit_stream(eng)
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        outs = [list(map(int, r.tokens))
+                for r in sorted(eng.finished, key=lambda r: r.rid)]
+        return wall, outs, eng.stats
+
+    base_wall, base_outs, _ = run_timed(False)
+    wall, outs, st = run_timed(True)
+    toks = sum(len(t) for t in outs)
+    base_toks = sum(len(t) for t in base_outs)
+    return {
+        "spec_k": spec_k,
+        "draft_bits": draft_bits,
+        "wall_s": round(wall, 4),
+        "generated_tokens": toks,
+        "tokens_per_sec": round(toks / wall, 2) if wall else 0.0,
+        "target_only_tokens_per_sec":
+            round(base_toks / base_wall, 2) if base_wall else 0.0,
+        "drafted_tokens": st.drafted_tokens,
+        "accepted_draft_tokens": st.accepted_draft_tokens,
+        "acceptance_rate": round(st.acceptance_rate, 4),
+        "accepted_tokens_per_step": round(st.accepted_tokens_per_step, 4),
+        "identical_output": outs == base_outs,
+    }
+
+
 #: mesh sizes the meshN rows run at (1xN "data"/"model" host meshes)
 MESH_SIZES = (1, 2, 8)
 
@@ -383,6 +441,10 @@ def bench(smoke: bool = True, requests: int = None, prompt_pool=None,
         "steady": steady,
         "overload": over,
     }
+    # speculative decoding: int8 target + int4 draft vs the target-only
+    # int8/chunk8 engine on the identical stream — the acceptance bars are
+    # accepted_tokens_per_step > 1 and bit-identical output
+    report["speculative"] = _serve_speculative(cfg, params, p)
     # shared-prefix workload: paged + prefix reuse vs dense on the same
     # stream — the acceptance bar is >= 1.5x effective prefill throughput
     sp = p["shared_prefix"]
@@ -422,6 +484,11 @@ def run():
     rows.append(("serve/shared_prefix/prefill_speedup", 0.0,
                  f"{sp['prefill_speedup']}x eff-prefill; "
                  f"hits={sp['paged']['prefix_hit_tokens']}"))
+    sd = rep["speculative"]
+    rows.append(("serve/speculative", 0.0,
+                 f"acc={sd['acceptance_rate']} "
+                 f"tok/step={sd['accepted_tokens_per_step']} "
+                 f"identical={sd['identical_output']}"))
     for key in ("steady", "overload"):
         r = rep["open_loop"][key]
         rows.append((f"serve/open_loop/{key}", 0.0,
@@ -486,6 +553,12 @@ def main(argv=None):
               f"{r['inter_token_s']['p50']}/{r['inter_token_s']['p99']}s, "
               f"rejected={r['rejected']} expired={r['expired']} "
               f"preempted={r['preempted']}")
+    sd = rep["speculative"]
+    print(f"speculative (k={sd['spec_k']}, int{sd['draft_bits']} draft): "
+          f"{sd['tokens_per_sec']} tok/s vs target-only "
+          f"{sd['target_only_tokens_per_sec']}, acceptance "
+          f"{sd['acceptance_rate']}, {sd['accepted_tokens_per_step']} "
+          f"accepted tok/step, identical_output={sd['identical_output']}")
     sp = rep["shared_prefix"]
     print(f"shared-prefix: paged effective prefill "
           f"{sp['paged']['effective_prefill_tok_s']} tok/s vs dense "

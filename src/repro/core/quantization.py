@@ -407,6 +407,57 @@ def quantize_tree(params, cfg: QuantConfig, predicate=_is_weight_matrix):
     return walk("", params)
 
 
+def derive_draft_params(params, *, bits: int = 4, mode: str = "affine",
+                        predicate=_is_weight_matrix):
+    """Derive a low-precision *draft* model from raw (pre-quantization)
+    params for self-speculative decoding.
+
+    The repo's quantization ladder means the draft is the SAME model at a
+    cheaper precision — no separate training, no second tokenizer, same
+    cache layout — which is all speculative decoding needs from a
+    proposer (correctness never depends on it; the target re-verifies
+    every token). Modes:
+
+    - ``"affine"`` / ``"codebook"``: :func:`quantize_tree` at ``bits``
+      (int4 is the intended draft point; int8 is a sharper, pricier
+      draft for bf16 targets).
+    - ``"shiftadd"``: the ShiftAddLLM reparameterization (binary planes
+      x power-of-two scales, ``repro.core.shiftadd``) reconstructed to
+      dense float32 — an *approximate* draft exercising a genuinely
+      different numeric path than the affine ladder. ``bits`` is the
+      number of binary planes.
+
+    Must be fed the ORIGINAL float params: deriving a draft from
+    already-quantized weights would compound two quantization errors.
+    """
+    if mode in ("affine", "codebook"):
+        return quantize_tree(
+            params, QuantConfig(bits=bits, mode=mode), predicate=predicate)
+    if mode != "shiftadd":
+        raise ValueError(f"unknown draft mode {mode!r} "
+                         "(expected affine | codebook | shiftadd)")
+    # function-local import: shiftadd pulls in the cycle simulator, which
+    # this module must not depend on at import time
+    from repro.core.shiftadd import binarize, reconstruct
+
+    def reparam(x):
+        w = np.asarray(x, np.float64)
+        flat = w.reshape((-1,) + w.shape[-2:])   # binarize() is 2-D only
+        out = np.empty_like(flat)
+        for i in range(flat.shape[0]):
+            out[i] = reconstruct(*binarize(flat[i], q=bits))
+        return jnp.asarray(out.reshape(w.shape), jnp.float32)
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}", v) for k, v in node.items()}
+        if predicate(prefix, node):
+            return reparam(node)
+        return node
+
+    return walk("", params)
+
+
 def tree_reuse_surface(params) -> int:
     """Total quantized weight elements (the surface AxLLM's RC acts on)."""
     n = 0

@@ -182,6 +182,22 @@ def main(argv=None):
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="queue-wait deadline per request; requests not "
                          "admitted in time finish as 'expired'")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-speculative decoding: a low-bit draft of the "
+                         "same model proposes --spec-k tokens per round, the "
+                         "serving-precision target verifies them in one "
+                         "chunked dispatch (bit-identical to target-only "
+                         "greedy)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculation round")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="draft quantization width (default int4)")
+    ap.add_argument("--draft-mode",
+                    choices=("affine", "codebook", "shiftadd"),
+                    default="affine",
+                    help="draft weight reconstruction: affine/codebook "
+                         "low-bit quantization or the shift-add binary "
+                         "reparameterization")
     ap.add_argument("--stats", action="store_true",
                     help="print scheduler stats JSON after the run")
     ap.add_argument("--set", action="append", default=[])
@@ -238,7 +254,10 @@ def main(argv=None):
                       paged=args.paged, kv_block_size=args.kv_block_size,
                       num_blocks=args.num_blocks,
                       prefix_cache=args.prefix_cache, mesh=mesh,
-                      max_queue=args.max_queue, admission=args.admission)
+                      max_queue=args.max_queue, admission=args.admission,
+                      speculate=args.speculate, spec_k=args.spec_k,
+                      draft_bits=args.draft_bits,
+                      draft_mode=args.draft_mode)
     rng = np.random.default_rng(0)
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -290,6 +309,14 @@ def main(argv=None):
               f"{args.admission}]: rejected={st.rejected} "
               f"expired={st.expired} preempted={st.preempted} "
               f"restored={st.restored} ({st.fast_restores} fast)")
+    if args.speculate:
+        st = eng.stats
+        print(f"  speculative [k={args.spec_k}, "
+              f"{args.draft_mode}{args.draft_bits} draft]: "
+              f"{st.accepted_draft_tokens}/{st.drafted_tokens} drafts "
+              f"accepted ({st.acceptance_rate:.2f}), "
+              f"{st.accepted_tokens_per_step:.2f} tokens/slot-round "
+              f"over {st.spec_rounds} rounds")
     if args.paged:
         print(f"  paged: {eng.stats.prefix_hit_tokens} prefix-hit tokens, "
               f"{eng.stats.blocks_in_use} blocks cached, "

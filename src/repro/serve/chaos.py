@@ -74,8 +74,9 @@ class ServeFailureInjector:
     """Engine ``fault_hook`` raising at chosen dispatch ordinals.
 
     ``fail_at`` counts calls across the selected ``phases`` ("prefill" /
-    "decode"); each listed ordinal raises once. The raise happens before
-    the jitted dispatch, where the engine guarantees rollback."""
+    "decode", plus "draft" / "verify" on a speculating engine); each
+    listed ordinal raises once. The raise happens before the jitted
+    dispatch, where the engine guarantees rollback."""
 
     def __init__(self, fail_at=(), phases=("prefill", "decode")):
         self.remaining = set(fail_at)
@@ -418,12 +419,53 @@ def scenario_adapter_race(params, smoke: bool) -> ChaosReport:
     return report
 
 
+def scenario_speculation_storm(params, smoke: bool) -> ChaosReport:
+    """Speculative decoding under fire: faults injected right before the
+    draft and verify dispatches, plus a block thief forcing preemption of
+    mid-flight *speculating* slots. A retried round must replay
+    bit-identically (the draft scan is deterministic and both caches'
+    cursors are host-reset every round), rollback must return every
+    rejected-tail block, and the final tokens must equal a fault-free
+    TARGET-ONLY run — the strongest form of the zero-corruption
+    invariant, since it also proves speculation changes nothing."""
+    report = ChaosReport("speculation_storm")
+    prompts = WORKLOAD[:6] if smoke else WORKLOAD
+    reference = _reference(params, prompts)     # target-only, fault-free
+    inj = ServeFailureInjector(fail_at=(1, 3, 4, 7),
+                               phases=("draft", "verify"))
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=MAX_LEN, paged=True,
+                      kv_block_size=BLOCK, fault_hook=inj,
+                      speculate=True, spec_k=4)
+    thief = BlockThief(steal=10_000, hold_steps=4, start_step=2)
+    rid_to_prompt = _submit_all(eng, prompts, report)
+    try:
+        _drive(eng, report, post_step=thief.on_step, thief=thief)
+    finally:
+        thief.release(eng)
+    _drive(eng, report)
+    report.faults_injected = inj.raised
+    _audit(eng, rid_to_prompt, reference, report)
+    if inj.raised == 0:
+        report.errors.append("no draft/verify fault was ever injected")
+    if report.preempted == 0 and report.errors == []:
+        report.errors.append("the thief never preempted a speculating "
+                             "slot")
+    if report.fast_restores:
+        report.errors.append("fast restore must be gated off under "
+                             "speculation (stale draft KV)")
+    if eng.stats.accepted_draft_tokens == 0 and report.errors == []:
+        report.errors.append("speculation never accepted a draft token "
+                             "(draft hopelessly misaligned?)")
+    return report
+
+
 SCENARIOS = {
     "pool_exhaustion": scenario_pool_exhaustion,
     "eviction_storm": scenario_eviction_storm,
     "dispatch_faults": scenario_dispatch_faults,
     "burst_arrivals": scenario_burst_arrivals,
     "adapter_race": scenario_adapter_race,
+    "speculation_storm": scenario_speculation_storm,
 }
 
 

@@ -52,6 +52,48 @@ class DecodeChunk(NamedTuple):
     gen: jax.Array         # [B] int32 tokens generated so far (incl. prefill)
 
 
+def verify_steps(decode_fn, params, last, drafts, cache, *,
+                 vocab_size: int):
+    """Teacher-forced scan for speculative verification: ONE dispatch that
+    feeds ``[last, d_1, ..., d_k]`` through the target model and returns
+    its greedy token after each input.
+
+    Where :func:`decode_steps` feeds each step the token *it* sampled,
+    the verify scan feeds the *draft's* proposals — the same scan body,
+    cache carry and on-device argmax, with the sampled-token feedback
+    edge replaced by the teacher-forced input row. ``targets[i]`` is the
+    target's greedy choice after consuming input ``i``, so the host's
+    accept-longest-prefix rule (``repro.serve.speculative``) compares
+    ``targets[:k]`` against the drafts and always has ``targets[m]`` as
+    the correction/bonus token.
+
+    The scan has NO stop machinery on purpose: EOS / budget / cache-full
+    are re-derived on the host while *appending* the accepted tokens
+    (mirroring ``ServeEngine._stop_reason``), because a stop may land
+    mid-acceptance and everything after it must be discarded. KV written
+    for rejected positions is rolled back by the engine (cursor reset /
+    ``PagedKVCache.truncate``), never read.
+
+    decode_fn: ``(params, token [B], cache) -> (logits [B, V], cache)``.
+    last:      [B] int32 last accepted token per slot.
+    drafts:    [k, B] int32 draft proposals (k == 0 verifies nothing and
+               degenerates to one plain greedy decode step).
+    Returns ``(targets [k+1, B] int32, cache)`` with the cache advanced
+    by k+1 positions (the engine resets per-row cursors afterwards).
+    """
+    inputs = jnp.concatenate(
+        [jnp.asarray(last, jnp.int32)[None, :],
+         jnp.asarray(drafts, jnp.int32)], axis=0)
+
+    def step(cache, tok):
+        logits, cache = decode_fn(params, tok, cache)
+        logits = logits[..., :vocab_size]
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    cache, targets = jax.lax.scan(step, cache, inputs)
+    return targets, cache
+
+
 def decode_steps(decode_fn, params, last, cache, rng, stop_mask, gen,
                  max_new, *, n: int, vocab_size: int, max_len: int,
                  eos_id: Optional[int] = None,

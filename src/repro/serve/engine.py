@@ -110,10 +110,29 @@ Scheduler contract
   prefill/decode dispatch, and any exception there rolls admission back,
   requeues the wave (adapter pins intact) and leaves the decode step
   idempotently retryable.
+- **Speculative decoding (`speculate=True`).** The quantization ladder
+  doubles as a draft model: `core.quantization.derive_draft_params`
+  re-quantizes the raw weights to `draft_bits` (affine/codebook, or the
+  shift-add reparameterization via `draft_mode="shiftadd"`) once at
+  init, and each round the draft proposes up to `spec_k` greedy tokens
+  from its own private dense cache, the serving-precision target
+  verifies all of them in ONE teacher-forced chunked-scan dispatch
+  (`repro.serve.decode.verify_steps`), and the engine emits the longest
+  agreeing prefix plus the target's correction token
+  (`repro.serve.speculative`). Output is bit-identical to target-only
+  greedy by construction — acceptance only moves throughput. Rollback
+  of optimistically written KV is a host cursor reset (dense) or
+  `PagedKVCache.truncate` (paged, whole trailing blocks back to the
+  pool, published prefixes untouched). Requires `greedy=True` and an
+  attention family; preempted speculating slots restore by recompute
+  (the fast swap path would miss the draft cache).
 - **Stats.** `engine.stats` tracks admitted/finished/truncated requests,
   decode steps/tokens, prefill waves/tokens/compiles (plus wall time),
-  LoRA-carrying requests, mean slot occupancy and — in paged mode —
-  `prefix_hit_tokens` / `blocks_in_use` / `cow_copies`;
+  LoRA-carrying requests, mean slot occupancy, — in paged mode —
+  `prefix_hit_tokens` / `blocks_in_use` / `cow_copies`, and — under
+  speculation — drafted/accepted token counts with `acceptance_rate`
+  and `accepted_tokens_per_step` (emitted per slot-round, > 1 means
+  drafting beats one-token-per-step);
   `stats.as_dict()` feeds `benchmarks/serve_bench.py`.
 
 `generate()` returns token lists for all submitted prompts; requests
@@ -135,13 +154,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.axllm_linear import deploy_quantize
-from repro.core.quantization import QuantConfig
+from repro.core.quantization import QuantConfig, derive_draft_params
 from repro.dist import sharding as shd
 from repro.models.model import ModelAPI, get_model
 from repro.serve.adapters import AdapterRegistry
-from repro.serve.decode import decode_steps
+from repro.serve.decode import decode_steps, verify_steps
 from repro.serve.paged_cache import PagedKVCache
 from repro.serve.scheduler import WaitQueue, pick_victim
+from repro.serve.speculative import accept_length, round_k
 
 
 @dataclasses.dataclass
@@ -216,6 +236,12 @@ class EngineStats:
     preempted: int = 0                # swap-outs of running slots
     restored: int = 0                 # re-admissions after preemption
     fast_restores: int = 0            # restores that skipped recompute
+    # speculative decoding (speculate=True): draft/verify round outcomes
+    spec_rounds: int = 0              # engine-level draft+verify rounds
+    spec_slot_rounds: int = 0         # sum over rounds of speculating slots
+    drafted_tokens: int = 0           # draft proposals checked by the target
+    accepted_draft_tokens: int = 0    # proposals the target agreed with
+    spec_emitted_tokens: int = 0      # tokens appended by spec rounds
 
     @property
     def mean_occupancy(self) -> float:
@@ -225,10 +251,28 @@ class EngineStats:
     def tokens_per_step(self) -> float:
         return self.decode_tokens / self.steps if self.steps else 0.0
 
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target confirmed."""
+        return (self.accepted_draft_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
+
+    @property
+    def accepted_tokens_per_step(self) -> float:
+        """Tokens emitted per slot-round (one draft+verify round of one
+        slot). Always >= 1 when rounds ran — each round emits at least
+        the target's own token — and > 1 iff speculation accepted
+        anything, which is the serve-bench gate for the feature paying
+        for itself."""
+        return (self.spec_emitted_tokens / self.spec_slot_rounds
+                if self.spec_slot_rounds else 0.0)
+
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["mean_occupancy"] = self.mean_occupancy
         d["tokens_per_step"] = self.tokens_per_step
+        d["acceptance_rate"] = self.acceptance_rate
+        d["accepted_tokens_per_step"] = self.accepted_tokens_per_step
         return d
 
 
@@ -317,7 +361,9 @@ class ServeEngine:
                  max_queue: Optional[int] = None,
                  admission: str = "block",
                  clock=None,
-                 fault_hook=None):
+                 fault_hook=None,
+                 speculate: bool = False, spec_k: int = 4,
+                 draft_bits: int = 4, draft_mode: str = "affine"):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "ServeEngine drives token-only prefill; encoder-decoder "
@@ -329,6 +375,7 @@ class ServeEngine:
             raise ValueError("max_len must be >= 2 (prompt + 1 decode step)")
         self.cfg = cfg
         self.api: ModelAPI = get_model(cfg, impl=impl)
+        raw_params = params               # pre-quantization, for the draft
         if quantize:
             bits = cfg.quant_bits if quant_bits is None else quant_bits
             params = deploy_quantize(
@@ -384,6 +431,41 @@ class ServeEngine:
             self.pager = None
             self.cache = self.api.init_cache(n_slots, max_len)
         self._validate_cache_spec()
+        self.speculate = speculate
+        self.spec_k = spec_k
+        self.draft_bits = draft_bits
+        self.draft_mode = draft_mode
+        self.draft_params = None
+        self.draft_cache = None
+        if speculate:
+            if not greedy:
+                raise ValueError(
+                    "speculate=True requires greedy=True: the accept rule "
+                    "compares the target's deterministic argmax against "
+                    "the draft's — sampled verification needs a "
+                    "rejection-sampling scheme this engine does not "
+                    "implement")
+            if self.api.init_paged_cache is None:
+                raise ValueError(
+                    f"family {cfg.family!r} has no speculative path: "
+                    "rollback needs position-addressable KV (truncate a "
+                    "cursor / block table); recurrent state folding "
+                    "cannot rewind k rejected positions (attention "
+                    "families only)")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            # the draft is derived from the ORIGINAL params: deriving it
+            # from already-quantized target weights would compound two
+            # quantization errors and crater the acceptance rate
+            draft = derive_draft_params(raw_params, bits=draft_bits,
+                                        mode=draft_mode)
+            if fuse:
+                draft = self.api.fuse_params(draft)
+            self.draft_params = draft
+            # the draft cache is ALWAYS dense, even when the target pages:
+            # draft KV is private scratch (never shared, never published,
+            # never swapped), so block bookkeeping would buy nothing
+            self.draft_cache = self.api.init_cache(n_slots, max_len)
         self.mesh = mesh
         self._rules = None
         if mesh is not None:
@@ -402,6 +484,7 @@ class ServeEngine:
         self._rid = 0
         self.stats = EngineStats()
         self._chunk_fns = {}          # (n, greedy) -> jit scan-decode fn
+        self._spec_fns = {}           # k -> (jit draft scan, jit verify scan)
         self._prefill_cache = {}      # (wave_bucket, padded_len) -> jit fn
         self._writer = jax.jit(self._write_wave, donate_argnums=(0,))
         self._sampler = jax.jit(_sample_tokens,
@@ -470,6 +553,17 @@ class ServeEngine:
         if self.registry is not None:
             self.registry.place(
                 shd.adapter_specs(self.registry.stacked, mesh, rules))
+        if self.speculate:
+            # the draft rides the same layout rules: same param paths
+            # (column/row-parallel projections) and a dense cache placed
+            # exactly like a dense target cache would be
+            dspecs = shd.param_specs(self.draft_params, mesh, rules)
+            self.draft_params = jax.tree_util.tree_map(
+                jax.device_put, self.draft_params, dspecs)
+            dcspecs = shd.cache_specs(self.draft_cache, mesh, self.n_slots,
+                                      self.max_len, rules=rules)
+            self.draft_cache = jax.tree_util.tree_map(
+                jax.device_put, self.draft_cache, dcspecs)
 
     def _constrain_wave(self, wave_cache, batch: int):
         """Pin a prefill wave cache (traced, inside jit) to the engine
@@ -636,6 +730,11 @@ class ServeEngine:
         False (recompute path) if anything was evicted meanwhile."""
         sw = r._swap
         if sw is None or not self.paged:
+            return False
+        if self.speculate:
+            # the draft cache is not swapped out (private scratch), so a
+            # fast restore would resume with stale draft KV; the recompute
+            # path rebuilds target AND draft token-identically instead
             return False
         if r.adapter is not None and sw.full_blocks:
             return False               # LoRA KV is never in the index
@@ -816,6 +915,22 @@ class ServeEngine:
             self.cache = self._writer(self.cache, wave_cache,
                                       jnp.asarray(src, jnp.int32),
                                       jnp.asarray(dst, jnp.int32))
+            if self.speculate:
+                # the draft prefills the same wave (its logits are unused:
+                # the first token always comes from the target above), so
+                # seated slots start each spec round with draft KV covering
+                # exactly the target's positions. Same jitted fn — params
+                # are jit arguments, the draft's structure traces once.
+                if self.registry is not None:
+                    _, dwave = fn(self.draft_params, jnp.asarray(toks),
+                                  jnp.asarray(lengths),
+                                  self.registry.stacked, jnp.asarray(aidx))
+                else:
+                    _, dwave = fn(self.draft_params, jnp.asarray(toks),
+                                  jnp.asarray(lengths))
+                self.draft_cache = self._writer(self.draft_cache, dwave,
+                                                jnp.asarray(src, jnp.int32),
+                                                jnp.asarray(dst, jnp.int32))
         self.stats.prefill_waves += 1
 
     def _write_wave(self, cache, wave_cache, src, dst):
@@ -987,8 +1102,45 @@ class ServeEngine:
                 continue
             self.slots[slot] = r
             self.adapter_slots[slot] = aidx[i]
+        if self.speculate:
+            self._draft_prefill_paged(admitted, slots_for, seqs)
         self.stats.prefill_waves += 1
         self.stats.blocks_in_use = pgr.blocks_in_use
+
+    def _draft_prefill_paged(self, admitted, slots_for, seqs):
+        """Draft-side prefill for a paged admission wave: the draft cache
+        is dense, so it cannot ride the suffix-only paged dispatch —
+        instead the FULL sequence of every seated request prefills through
+        the plain dense path (prefix hits save target compute only; the
+        draft recomputes its whole KV, which is the cheap model by
+        construction). Runs after the target wave committed: a request the
+        target deferred or finished at prefill never reaches here."""
+        keep = [(i, slot) for i, (r, slot) in enumerate(zip(admitted,
+                                                            slots_for))
+                if self.slots[slot] is r]
+        if not keep:
+            return
+        wb = _pow2_bucket(len(keep), 1, self.n_slots)
+        pl = _pow2_bucket(max(len(seqs[i]) for i, _ in keep),
+                          min(8, self.max_len), self.max_len)
+        toks = np.zeros((wb, pl), np.int32)
+        lengths = np.ones((wb,), np.int32)
+        aidx = np.full((wb,), -1, np.int32)
+        for j, (i, slot) in enumerate(keep):
+            toks[j, : len(seqs[i])] = seqs[i]
+            lengths[j] = len(seqs[i])
+            aidx[j] = self.adapter_slots[slot]
+        fn = self._get_prefill(wb, pl)
+        if self.registry is not None:
+            _, dwave = fn(self.draft_params, jnp.asarray(toks),
+                          jnp.asarray(lengths), self.registry.stacked,
+                          jnp.asarray(aidx))
+        else:
+            _, dwave = fn(self.draft_params, jnp.asarray(toks),
+                          jnp.asarray(lengths))
+        src = jnp.asarray(list(range(len(keep))), jnp.int32)
+        dst = jnp.asarray([slot for _, slot in keep], jnp.int32)
+        self.draft_cache = self._writer(self.draft_cache, dwave, src, dst)
 
     # -- sampling --------------------------------------------------------------
     def _sample(self, logits):
@@ -1068,6 +1220,225 @@ class ServeEngine:
                 self._chunk_fns[key] = jax.jit(fn, donate_argnums=(4,))
         return self._chunk_fns[key]
 
+    # -- speculative decode ----------------------------------------------------
+    def _get_spec_fns(self, k: int):
+        """Jitted (draft, verify) pair for draft length ``k``.
+
+        The draft scan is ``decode_steps`` with every stop condition
+        defused (no eos, budget/pos bounds vacuous): proposals past a
+        real stop are garbage the host's per-token ``_stop_reason``
+        discards while appending, and a free-running scan is what makes
+        a retried round bit-deterministic. It runs k+1 steps — one more
+        than the proposals used — so draft KV lands at the same
+        ``pos .. pos+k`` the verify scan writes, keeping the two caches
+        position-aligned even on an all-accept round. The verify scan is
+        :func:`repro.serve.decode.verify_steps` over the target. Both
+        donate their cache. ``k`` is compile-time (bucketed by
+        ``round_k``), mirroring ``_get_chunk_fn``'s per-length cache."""
+        if k not in self._spec_fns:
+            api, cfg = self.api, self.cfg
+            vs = cfg.vocab_size
+            no_stop_len = self.max_len + 2    # pos bound can never fire
+            if self.registry is None:
+                def draft_fn(dparams, last, dcache, rng, stop):
+                    b = last.shape[0]
+                    return decode_steps(
+                        api.decode, dparams, last, dcache, rng, stop,
+                        jnp.zeros((b,), jnp.int32),
+                        jnp.full((b,), 1 << 30, jnp.int32),
+                        n=k + 1, vocab_size=vs, max_len=no_stop_len,
+                        eos_id=None, greedy=True)
+
+                def verify_fn(params, last, drafts, cache):
+                    return verify_steps(api.decode, params, last, drafts,
+                                        cache, vocab_size=vs)
+
+                self._spec_fns[k] = (
+                    jax.jit(draft_fn, donate_argnums=(2,)),
+                    jax.jit(verify_fn, donate_argnums=(3,)))
+            else:
+                scaling = self.registry.scaling
+
+                def draft_fn(dparams, stacked, aidx, last, dcache, rng,
+                             stop):
+                    def dec(p, t, c):
+                        return api.decode(p, t, c, adapters=stacked,
+                                          adapter_idx=aidx,
+                                          lora_scaling=scaling)
+                    b = last.shape[0]
+                    return decode_steps(
+                        dec, dparams, last, dcache, rng, stop,
+                        jnp.zeros((b,), jnp.int32),
+                        jnp.full((b,), 1 << 30, jnp.int32),
+                        n=k + 1, vocab_size=vs, max_len=no_stop_len,
+                        eos_id=None, greedy=True)
+
+                def verify_fn(params, stacked, aidx, last, drafts, cache):
+                    def dec(p, t, c):
+                        return api.decode(p, t, c, adapters=stacked,
+                                          adapter_idx=aidx,
+                                          lora_scaling=scaling)
+                    return verify_steps(dec, params, last, drafts, cache,
+                                        vocab_size=vs)
+
+                self._spec_fns[k] = (
+                    jax.jit(draft_fn, donate_argnums=(4,)),
+                    jax.jit(verify_fn, donate_argnums=(5,)))
+        return self._spec_fns[k]
+
+    def _spec_step(self, active, max_n: Optional[int]) -> bool:
+        """One speculative round over the active slots: draft k proposals
+        with the low-precision model, verify all of them in ONE
+        teacher-forced target dispatch, append the longest agreeing
+        prefix plus the target's correction token, and roll the KV tail
+        written for rejected positions back (cursor reset / block
+        truncation). Greedy output is bit-identical to `_step`'s
+        target-only decode — every appended token is the target's own
+        argmax (tests/test_speculative.py).
+
+        Fault retry contract: both caches' ``pos`` cursors are host-set
+        from request state at the top of every round, and the draft scan
+        is deterministic (greedy, stop-free), so a round that faults at
+        the "draft" or "verify" hook re-runs bit-identically — the
+        positions past the cursor that a partial round already wrote are
+        simply rewritten with the same values."""
+        positions = {i: len(self.slots[i].prompt)
+                     + len(self.slots[i].tokens) - 1 for i in active}
+
+        def pick_k():
+            return round_k(
+                self.spec_k, max_len=self.max_len,
+                positions=[positions[i] for i in active],
+                budgets=[self.slots[i].max_new - len(self.slots[i].tokens)
+                         for i in active],
+                max_n=max_n)
+
+        k = pick_k()
+        if self.paged:
+            # plan -> commit for the whole k+1 verify window, preempting
+            # while it cannot fit (mirrors `_step`; a single slot always
+            # fits because k is clamped to the slot's own remaining room)
+            while len(active) > 1:
+                need = 0
+                for i in active:
+                    a, c = self.pager.plan_decode(i, positions[i], k + 1)
+                    need += a + c
+                if self.pager.can_allocate(need):
+                    break
+                self._preempt_slot(pick_victim(self.slots))
+                active = [i for i, s in enumerate(self.slots)
+                          if s is not None]
+                k = pick_k()
+            cow = []
+            pos_host = np.zeros((self.n_slots,), np.int32)
+            for i in active:
+                pos_host[i] = positions[i]
+                cow += self.pager.prepare_decode(i, positions[i], k + 1)
+            if cow:
+                pad = _pow2_bucket(len(cow), 1, 1 << 30) - len(cow)
+                pairs = cow + [(0, 0)] * pad
+                self.cache = self._copier(
+                    self.cache,
+                    jnp.asarray([c[0] for c in pairs], jnp.int32),
+                    jnp.asarray([c[1] for c in pairs], jnp.int32))
+                self.stats.cow_copies += len(cow)
+            self.cache["pos"] = jnp.asarray(pos_host)
+            self.cache["block_tables"] = jnp.asarray(self.pager.tables)
+            self.stats.blocks_in_use = self.pager.blocks_in_use
+        else:
+            # dense rollback is this line: the verify scan advanced the
+            # device cursor to pos+k+1 last round, resetting it to the
+            # accepted length makes the stale tail dead weight the next
+            # window overwrites
+            pos_host = np.zeros((self.n_slots,), np.int32)
+            for i in active:
+                pos_host[i] = positions[i]
+            self.cache["pos"] = jnp.asarray(pos_host)
+        dpos = np.zeros((self.n_slots,), np.int32)
+        for i in active:
+            dpos[i] = positions[i]
+        self.draft_cache["pos"] = jnp.asarray(dpos)
+        last = np.zeros((self.n_slots,), np.int32)
+        stop = np.ones((self.n_slots,), bool)
+        for i in active:
+            last[i] = self.slots[i].tokens[-1]
+            stop[i] = False
+        draft_fn, verify_fn = self._get_spec_fns(k)
+        if k:
+            if self.fault_hook is not None:
+                self.fault_hook("draft")
+            if self.registry is not None:
+                dout = draft_fn(self.draft_params, self.registry.stacked,
+                                jnp.asarray(self.adapter_slots),
+                                jnp.asarray(last), self.draft_cache,
+                                self.rng, jnp.asarray(stop))
+            else:
+                dout = draft_fn(self.draft_params, jnp.asarray(last),
+                                self.draft_cache, self.rng,
+                                jnp.asarray(stop))
+            self.draft_cache = dout.cache
+            drafts_dev = dout.tokens[:k]
+            drafts = np.asarray(drafts_dev)
+        else:
+            drafts_dev = jnp.zeros((0, self.n_slots), jnp.int32)
+            drafts = np.zeros((0, self.n_slots), np.int32)
+        if self.fault_hook is not None:
+            self.fault_hook("verify")
+        if self.registry is not None:
+            targets_dev, self.cache = verify_fn(
+                self.params, self.registry.stacked,
+                jnp.asarray(self.adapter_slots), jnp.asarray(last),
+                drafts_dev, self.cache)
+        else:
+            targets_dev, self.cache = verify_fn(
+                self.params, jnp.asarray(last), drafts_dev, self.cache)
+        targets = np.asarray(targets_dev)          # [k+1, B]
+        now = self._now()
+        emitted = 0
+        for i in active:
+            r = self.slots[i]
+            m = accept_length(drafts[:, i], targets[:, i])
+            got = 0
+            reason = None
+            for t in range(m + 1):
+                # stops are re-derived per appended token: an EOS / budget
+                # / cache-full landing mid-acceptance discards the rest
+                r.tokens.append(int(targets[t, i]))
+                got += 1
+                reason = self._stop_reason(r)
+                if reason is not None:
+                    break
+            r.t_last = now
+            emitted += got
+            self.stats.spec_slot_rounds += 1
+            self.stats.drafted_tokens += k
+            # of the kept tokens, all but a final correction/bonus token
+            # were draft proposals
+            self.stats.accepted_draft_tokens += min(got, m)
+            if self.paged:
+                # rollback: keep exactly the KV the kept tokens stand on
+                # (prompt ++ tokens[:-1]); whole tail blocks written for
+                # rejected positions return to the pool
+                self.pager.truncate(i, positions[i] + got)
+            if reason is not None:
+                if self.paged:
+                    if r.adapter is None:
+                        self.pager.insert(self._kv_seq(r),
+                                          self.pager.slot_blocks(i))
+                    self.pager.release_slot(i)
+                self._finish(r, reason)
+                self.slots[i] = None
+                self.adapter_slots[i] = -1
+        self.stats.spec_rounds += 1
+        self.stats.spec_emitted_tokens += emitted
+        self.stats.decode_tokens += emitted
+        self.stats.steps += k + 1                  # target decode steps
+        self.stats.decode_chunks += 2 if k else 1  # dispatches this round
+        self.stats.occupancy_sum += (k + 1) * len(active) / self.n_slots
+        if self.paged:
+            self.stats.blocks_in_use = self.pager.blocks_in_use
+        return True
+
     def step(self, max_n: Optional[int] = None) -> bool:
         """Admit a prefill wave, then run ONE chunked decode dispatch of up
         to min(decode_chunk, max_n, largest per-slot remaining budget)
@@ -1113,6 +1484,8 @@ class ServeEngine:
                     f"(num_blocks={getattr(self, 'num_blocks', None)})")
         if not active:
             return False
+        if self.speculate:
+            return self._spec_step(active, max_n)
         n = self._chunk_len(active, max_n)
         if self.paged:
             # plan -> commit: reserve the whole write window's block
@@ -1245,19 +1618,28 @@ class ServeEngine:
                 self.paged,
                 self.kv_block_size if self.paged else None,
                 getattr(self, "num_blocks", None) if self.paged else None,
-                self.mesh)
+                self.mesh,
+                self.speculate, self.spec_k if self.speculate else None,
+                self.draft_bits if self.speculate else None,
+                self.draft_mode if self.speculate else None)
         theirs = (other.cfg, other.eos_id, other.max_len, other.greedy,
                   other.n_slots, other.registry is None,
                   None if other.registry is None else other.registry.scaling,
                   other.paged,
                   other.kv_block_size if other.paged else None,
                   getattr(other, "num_blocks", None) if other.paged else None,
-                  other.mesh)
+                  other.mesh,
+                  other.speculate,
+                  other.spec_k if other.speculate else None,
+                  other.draft_bits if other.speculate else None,
+                  other.draft_mode if other.speculate else None)
         if mine != theirs:
             raise ValueError(
                 "adopt_compiled: engines differ in (cfg, eos_id, max_len, "
-                f"greedy, n_slots, paged layout, mesh): {mine} vs {theirs}")
+                "greedy, n_slots, paged layout, mesh, speculation): "
+                f"{mine} vs {theirs}")
         self._chunk_fns = other._chunk_fns
+        self._spec_fns = other._spec_fns
         self._prefill_cache = other._prefill_cache
         self._writer = other._writer
         self._sampler = other._sampler

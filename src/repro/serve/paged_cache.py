@@ -342,6 +342,33 @@ class PagedKVCache:
         self.tables[slot, :] = TRASH_BLOCK
         self._slot_len[slot] = 0
 
+    def truncate(self, slot: int, new_len: int) -> int:
+        """Shrink ``slot``'s table to cover ``new_len`` tokens, releasing
+        whole trailing blocks back to the pool. Returns the number of
+        blocks released.
+
+        This is the speculative-decoding rollback primitive: a verify
+        window writes KV at ``pos .. pos + k`` optimistically, and after
+        the host accepts ``m <= k`` draft tokens the slot only holds
+        ``new_len = pos + m + 1`` positions — any block wholly past that
+        point is unreferenced garbage. Only *trailing whole blocks* are
+        released (released means refcount-decremented: a block the radix
+        index also holds survives with its published prefix intact —
+        rollback never rewrites history, the boundary block's garbage
+        tail is simply overwritten by the next decode window and never
+        published, since :meth:`insert` only indexes full chunks of the
+        actual token sequence).
+        """
+        keep = -(-new_len // self.block_size)          # ceil-div
+        n = int(self._slot_len[slot])
+        if keep >= n:
+            return 0
+        for j in range(keep, n):
+            self._release_block(int(self.tables[slot, j]))
+            self.tables[slot, j] = TRASH_BLOCK
+        self._slot_len[slot] = keep
+        return n - keep
+
     def slot_blocks(self, slot: int) -> List[int]:
         return [int(b) for b in self.tables[slot, : self._slot_len[slot]]]
 

@@ -1,0 +1,384 @@
+"""Self-speculative decoding: the differential battery.
+
+The hard gate of PR-level acceptance is *bit-identity* — speculative
+greedy decode must produce exactly the tokens target-only greedy decode
+produces, across every serving configuration, because every emitted
+token is the target's own argmax (the draft only proposes). The battery:
+
+- fast representatives (tier-1): one case per axis — dense int8+int4,
+  paged, fused, multi-LoRA, bf16 target + shiftadd draft, spec_k 1/8,
+  EOS landing mid-acceptance;
+- the full {target} x {draft} x {mode} x {spec_k} matrix, `slow`-marked
+  for its own CI lane;
+- hypothesis property tests for the pure host rules (accept-longest-
+  prefix, emitted block, round sizing);
+- rollback invariants on the paged pool: slot tables shrink back to
+  exactly the accepted KV every round, blocks_in_use returns to zero at
+  drain, no refcount leaks (check_consistency), and the
+  `PagedKVCache.truncate` primitive in isolation.
+"""
+
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import ModelConfig
+from repro.models.model import get_model
+from repro.serve.engine import ServeEngine
+from repro.serve.paged_cache import TRASH_BLOCK, PagedKVCache
+from repro.serve.speculative import accept_length, emitted_tokens, round_k
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+CFG = ModelConfig(name="s", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, vocab_pad_multiple=64, dtype="float32")
+
+MIXED = [np.arange(8) + 1, np.arange(12) + 3, np.arange(31) + 7,
+         np.arange(12) + 40, np.arange(8) + 60]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _adapters(n=2):
+    from repro.launch.serve import make_synthetic_adapters
+    return make_synthetic_adapters(CFG, n)
+
+
+def _engine(params, *, speculate=False, adapters=None, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("decode_chunk", 4)
+    return ServeEngine(CFG, params, greedy=True, speculate=speculate,
+                       adapters=adapters, **kw)
+
+
+def _assert_identical(params, *, max_new=12, prompts=MIXED, adapters=None,
+                      names=None, spec_k=4, **kw):
+    """Target-only vs speculative engines over the same workload: token
+    lists must match exactly. Returns the speculative engine's stats."""
+    gen_kw = {}
+    if names is not None:
+        gen_kw["adapters"] = (names * len(prompts))[: len(prompts)]
+    ref = _engine(params, adapters=adapters, **kw).generate(
+        prompts, max_new=max_new, **gen_kw)
+    eng = _engine(params, speculate=True, spec_k=spec_k, adapters=adapters,
+                  **kw)
+    out = eng.generate(prompts, max_new=max_new, **gen_kw)
+    assert out == ref
+    assert eng.stats.spec_rounds > 0
+    assert eng.stats.spec_emitted_tokens == sum(len(t) for t in out) \
+        - len(prompts)                    # first tokens come from prefill
+    if eng.paged:
+        eng.pager.check_consistency()
+        assert eng.pager.blocks_in_use == 0 or kw.get("prefix_cache", True)
+    return eng.stats
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 representatives: one fast case per matrix axis
+# ---------------------------------------------------------------------------
+
+def test_spec_dense_int8_target_int4_draft(params):
+    stats = _assert_identical(params, quantize=True, draft_bits=4)
+    # the serve-bench gate in miniature: speculation must beat one
+    # token per round on this fixed workload (deterministic seeds)
+    assert stats.accepted_tokens_per_step > 1.0
+    assert stats.drafted_tokens > 0
+    assert 0.0 < stats.acceptance_rate <= 1.0
+
+
+def test_spec_bf16_target_shiftadd_draft(params):
+    stats = _assert_identical(params, quantize=False, draft_mode="shiftadd",
+                              draft_bits=8)
+    assert stats.accepted_tokens_per_step > 1.0
+
+
+def test_spec_paged(params):
+    _assert_identical(params, quantize=True, paged=True, kv_block_size=8)
+
+
+def test_spec_fused(params):
+    _assert_identical(params, quantize=True, fuse_qkv=True)
+
+
+def test_spec_multi_lora(params):
+    reg, names = _adapters(2)
+    _assert_identical(params, quantize=True, adapters=reg,
+                      names=[names[0], None, names[1]])
+
+
+@pytest.mark.parametrize("spec_k", [1, 8])
+def test_spec_k_extremes(params, spec_k):
+    _assert_identical(params, quantize=True, spec_k=spec_k)
+
+
+def test_spec_eos_mid_acceptance(params):
+    """An EOS landing inside the accepted prefix must cut the request
+    exactly where target-only decode would stop."""
+    ref_eng = _engine(params, quantize=True)
+    ref_tokens = ref_eng.generate(MIXED[:2], max_new=12)
+    # pick an eos id from the middle of a reference stream so the stop
+    # genuinely lands mid-round for some spec_k
+    eos = ref_tokens[0][len(ref_tokens[0]) // 2]
+    for spec_k in (2, 4):
+        _assert_identical(params, quantize=True, eos_id=int(eos),
+                          spec_k=spec_k, prompts=MIXED[:2])
+
+
+def test_spec_cache_full_truncation(params):
+    """max_len pressure: the k clamp must keep every verify write in
+    bounds and the cache_full stop must fire identically."""
+    _assert_identical(params, quantize=True, max_len=16, max_new=32,
+                      prompts=[np.arange(6) + 1, np.arange(10) + 2])
+
+
+def test_spec_restore_after_preemption(params):
+    """A speculating slot preempted by pool pressure must resume
+    bit-identically (recompute restore rebuilds target AND draft KV)."""
+    base = dict(quantize=True, paged=True, kv_block_size=8, n_slots=2,
+                max_len=64)
+    ref = ServeEngine(CFG, params, greedy=True, **base)
+    want = ref.generate(MIXED, max_new=12)
+    eng = ServeEngine(CFG, params, greedy=True, speculate=True, spec_k=4,
+                      **base)
+    for p in MIXED[:2]:
+        eng.submit(p, max_new=12)
+    eng.step()
+    # force a preemption of a mid-flight speculating slot
+    victim = next(i for i, s in enumerate(eng.slots) if s is not None)
+    eng._preempt_slot(victim)
+    eng.pager.check_consistency()
+    assert eng.stats.preempted == 1
+    for p in MIXED[2:]:
+        eng.submit(p, max_new=12)
+    eng.run()
+    got = {r.rid: r.tokens for r in eng.finished}
+    assert [got[i] for i in sorted(got)] == want
+    assert eng.stats.restored >= 1
+    assert eng.stats.fast_restores == 0        # gated off under speculation
+
+
+# ---------------------------------------------------------------------------
+# Constructor validation
+# ---------------------------------------------------------------------------
+
+def test_spec_requires_greedy(params):
+    with pytest.raises(ValueError, match="greedy"):
+        ServeEngine(CFG, params, speculate=True, greedy=False)
+
+
+def test_spec_requires_positive_k(params):
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(CFG, params, speculate=True, spec_k=0)
+
+
+def test_spec_rejects_recurrent_family():
+    ssm = ModelConfig(name="m", family="ssm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+                      vocab_pad_multiple=64, xlstm_slstm_every=2,
+                      dtype="float32", remat=False)
+    p = get_model(ssm).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="speculative"):
+        ServeEngine(ssm, p, speculate=True)
+
+
+def test_spec_rejects_unknown_draft_mode(params):
+    with pytest.raises(ValueError, match="draft mode"):
+        ServeEngine(CFG, params, speculate=True, draft_mode="fp64")
+
+
+def test_adopt_compiled_rejects_spec_mismatch(params):
+    a = _engine(params, quantize=True, speculate=True, spec_k=4)
+    b = _engine(params, quantize=True)
+    with pytest.raises(ValueError, match="adopt_compiled"):
+        b.adopt_compiled(a)
+    c = _engine(params, quantize=True, speculate=True, spec_k=2)
+    with pytest.raises(ValueError, match="adopt_compiled"):
+        c.adopt_compiled(a)
+
+
+# ---------------------------------------------------------------------------
+# Host acceptance rules (hypothesis)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def draft_target_pairs(draw, max_k=8, vocab=16):
+    """(draft, target) with target one longer, over a small vocab so
+    agreements actually happen."""
+    k = draw(st.integers(0, max_k))
+    draft = draw(st.lists(st.integers(0, vocab - 1), min_size=k,
+                          max_size=k))
+    target = draw(st.lists(st.integers(0, vocab - 1), min_size=k + 1,
+                           max_size=k + 1))
+    return draft, target
+
+
+@given(draft_target_pairs())
+def test_accept_length_is_first_mismatch(pair):
+    draft, target = pair
+    m = accept_length(draft, target)
+    assert 0 <= m <= len(draft)
+    assert all(draft[i] == target[i] for i in range(m))
+    if m < len(draft):
+        assert draft[m] != target[m]
+
+
+@given(draft_target_pairs())
+def test_emitted_tokens_are_targets_prefix(pair):
+    draft, target = pair
+    out = emitted_tokens(draft, target)
+    m = accept_length(draft, target)
+    assert out == [int(t) for t in target[: m + 1]]
+    assert 1 <= len(out) <= len(draft) + 1     # always progresses
+
+
+@given(st.lists(st.integers(0, 15), min_size=0, max_size=8))
+def test_accept_all_when_target_agrees(draft):
+    """All-accept edge: target echoing the whole draft accepts k and the
+    bonus token is target's final entry."""
+    target = list(draft) + [99]
+    assert accept_length(draft, target) == len(draft)
+    assert emitted_tokens(draft, target) == list(draft) + [99]
+
+
+def test_accept_k0_edge():
+    assert accept_length([], [7]) == 0
+    assert emitted_tokens([], [7]) == [7]
+
+
+def test_accept_length_shape_mismatch():
+    with pytest.raises(ValueError):
+        accept_length([1, 2], [1, 2])
+
+
+@given(st.integers(1, 16), st.integers(4, 64),
+       st.lists(st.integers(0, 60), min_size=1, max_size=4),
+       st.lists(st.integers(1, 40), min_size=1, max_size=4))
+def test_round_k_invariants(spec_k, max_len, positions, budgets):
+    hypothesis.assume(all(p <= max_len - 1 for p in positions))
+    k = round_k(spec_k, max_len=max_len, positions=positions,
+                budgets=budgets)
+    assert 0 <= k <= spec_k
+    # every verify write stays in bounds for every slot
+    assert max(positions) + k <= max_len - 1
+    # a round emits at most k+1; never draft past the largest budget
+    assert k == 0 or k + 1 <= max(budgets) + 1
+    # bucketing: k is 0, a power of two, or spec_k itself
+    assert k in (0, spec_k) or (k & (k - 1)) == 0
+
+
+def test_round_k_rejects_bad_spec_k():
+    with pytest.raises(ValueError):
+        round_k(0, max_len=8, positions=[1], budgets=[4])
+
+
+# ---------------------------------------------------------------------------
+# Rollback invariants: the paged pool never leaks speculative blocks
+# ---------------------------------------------------------------------------
+
+def test_truncate_frees_trailing_blocks():
+    p = PagedKVCache(n_slots=2, n_blocks=20, block_size=4,
+                     max_blocks_per_slot=8, prefix_cache=False)
+    assert p.admit(0, [], 5)
+    base = p.blocks_in_use
+    blocks = p.slot_blocks(0)
+    assert p.truncate(0, 9) == 2              # keep ceil(9/4)=3 of 5
+    assert p.blocks_in_use == base - 2
+    assert p.slot_blocks(0) == blocks[:3]
+    assert all(int(b) == TRASH_BLOCK for b in p.tables[0, 3:])
+    assert p.truncate(0, 12) == 0             # already exact: no-op
+    assert p.truncate(0, 20) == 0             # growing is not truncate's job
+    p.check_consistency()
+    p.release_slot(0)
+    assert p.blocks_in_use == 0
+
+
+def test_truncate_preserves_published_prefixes():
+    """A truncated block the radix index still holds survives with its
+    published prefix intact — rollback must not rewrite history."""
+    p = PagedKVCache(n_slots=2, n_blocks=20, block_size=4,
+                     max_blocks_per_slot=8)
+    seq = list(range(1, 13))                   # 3 full blocks
+    assert p.admit(0, [], 3)
+    p.insert(seq, p.slot_blocks(0))
+    shared = p.slot_blocks(0)
+    assert p.truncate(0, 5) == 1              # drop the slot's 3rd block
+    p.check_consistency()
+    # the published prefix still matches in full for a new request
+    hit, n = p.match(seq + [13])              # match does not acquire
+    assert n == 12 and hit == shared
+    p.release_slot(0)
+    p.check_consistency()
+
+
+def test_truncate_boundary_block_kept():
+    p = PagedKVCache(n_slots=1, n_blocks=12, block_size=4,
+                     max_blocks_per_slot=8, prefix_cache=False)
+    assert p.admit(0, [], 4)
+    # new_len inside block 2: blocks 0..2 stay, block 3 frees
+    assert p.truncate(0, 11) == 1
+    assert len(p.slot_blocks(0)) == 3
+    p.check_consistency()
+
+
+def test_spec_rollback_returns_blocks_every_round(params):
+    """Drive a paged speculative engine step by step: after every round
+    each running slot holds exactly ceil(kv_len / block) blocks — the
+    k+1 verify window's surplus went back to the pool — and the books
+    balance at every step and at drain."""
+    eng = _engine(params, speculate=True, spec_k=4, quantize=True,
+                  paged=True, kv_block_size=8, prefix_cache=False)
+    for prompt in MIXED:
+        eng.submit(prompt, max_new=12)
+    while eng.step():
+        eng.pager.check_consistency()
+        for i, r in enumerate(eng.slots):
+            if r is None:
+                continue
+            kv_len = len(r.prompt) + len(r.tokens) - 1
+            assert len(eng.pager.slot_blocks(i)) == math.ceil(kv_len / 8)
+    assert eng.pager.blocks_in_use == 0        # no leaked refcounts
+    eng.pager.check_consistency()
+
+
+# ---------------------------------------------------------------------------
+# The full differential matrix (its own CI lane)
+# ---------------------------------------------------------------------------
+
+TARGETS = [("int8", dict(quantize=True)),
+           ("bf16", dict(quantize=False))]
+DRAFTS = [("int4", dict(draft_bits=4, draft_mode="affine")),
+          ("shiftadd", dict(draft_bits=8, draft_mode="shiftadd"))]
+MODES = [("plain", dict()),
+         ("fused", dict(fuse_qkv=True)),
+         ("paged", dict(paged=True, kv_block_size=8)),
+         ("lora", dict())]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tname,tkw", TARGETS, ids=[t[0] for t in TARGETS])
+@pytest.mark.parametrize("dname,dkw", DRAFTS, ids=[d[0] for d in DRAFTS])
+@pytest.mark.parametrize("mname,mkw", MODES, ids=[m[0] for m in MODES])
+@pytest.mark.parametrize("spec_k", [1, 8])
+def test_spec_differential_matrix(params, tname, tkw, dname, dkw, mname,
+                                  mkw, spec_k):
+    kw = dict(tkw); kw.update(dkw); kw.update(mkw)
+    adapters = names = None
+    if mname == "lora":
+        reg, adapter_names = _adapters(2)
+        adapters = reg
+        names = [adapter_names[0], None, adapter_names[1]]
+    _assert_identical(params, spec_k=spec_k, adapters=adapters,
+                      names=names, **kw)

@@ -9,8 +9,13 @@ run) because CI runners are slower and noisier than dev machines — the
 gate exists to catch structural regressions (a dispatch sneaking back into
 the decode hot loop, a donation lost, an accidental recompile per step),
 not single-digit jitter. The shared-prefix prefill speedup is gated as a
-*ratio*, which is machine-independent. ``ceilings`` entries gate
-latency-style metrics from above — the open-loop steady p99 TTFT must not
+*ratio*, which is machine-independent, as is the speculative
+accepted-tokens-per-step ratio (> 1 means drafting pays for itself).
+``flags`` entries are exact-match booleans with no grace — the speculative
+``identical_output`` provenance tag must be True, because greedy
+speculative decoding is bit-identical to target-only greedy by
+construction and any mismatch is a correctness bug. ``ceilings`` entries
+gate latency-style metrics from above — the open-loop steady p99 TTFT must not
 drift past its ceiling (+20% grace), catching admission/preemption paths
 that start stalling requests.
 
@@ -74,6 +79,18 @@ def check(bench_path: pathlib.Path) -> list:
     # ceilings bound latency-style metrics from above (e.g. the open-loop
     # steady p99 TTFT): a value drifting past ceiling*(1+GRACE) means the
     # admission/preemption path started stalling requests
+    # flags are exact-match booleans (no grace): provenance tags like the
+    # speculative identical_output bit, where any mismatch is a correctness
+    # bug rather than a performance regression
+    for name, want in floors.get("flags", {}).items():
+        got = _lookup(fresh, name)
+        if not isinstance(got, bool):
+            errors.append(f"flag {name!r} missing from {bench_path.name}")
+            continue
+        verdict = "OK" if got == want else "FAIL"
+        print(f"  {name}: {got} (want {want}) {verdict}")
+        if got != want:
+            errors.append(f"{name}: {got}, expected exactly {want}")
     for name, ceiling in floors.get("ceilings", {}).items():
         got = _lookup(fresh, name)
         if not isinstance(got, (int, float)):

@@ -30,6 +30,7 @@ DOCTEST_MODULES = [
     "repro.serve.adapters",
     "repro.serve.engine",
     "repro.serve.decode",
+    "repro.serve.speculative",
     "repro.serve.scheduler",
     "repro.launch.mesh",
     "repro.kernels.ops",
