@@ -43,7 +43,19 @@ the decode hot path:
     into a bounded queue under the reject admission policy with mixed
     priorities and a queue-wait deadline, recording the shed counters
     (rejected / expired / preempted) alongside the tail latencies —
-    check_bench gates the steady p99 TTFT against a ceiling.
+    check_bench gates the steady p99 TTFT against a ceiling. Both rows
+    serve under a chunked-prefill budget, which fixes the prefill wave
+    shape: trickling sub-wave arrivals reuse the closed-loop warmup's
+    compiled buckets (this replaced a per-arrival-pattern warmup sweep).
+
+  - long-prompt interleave (``long_prompt_interleave`` row): a 4k-token
+    prompt arrives while short streams are mid-decode, served once with
+    a chunked-prefill budget and once without. Tokens are emitted through
+    the streaming ``on_token`` callback and per-token gaps of the short
+    streams recorded: the unbudgeted run eats the full monolithic prefill
+    as one head-of-line stall, the budgeted run bounds it to one chunk.
+    check_bench gates the budgeted p99 gap against a ceiling and the
+    budgeted/unbudgeted throughput ratio against a floor.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
 
@@ -62,14 +74,26 @@ import time
 
 import numpy as np
 
+_LONG_PROMPT = dict(long_len=4096, long_max_new=8, short_len=16, n_short=3,
+                    max_new=48, n_slots=4, max_len=4224, kv_block_size=16,
+                    budget=512)
+
 SMOKE = dict(n_slots=2, max_len=64, requests=6, max_new=16,
              prompt_lens=(8, 12, 31),
              shared_prefix=dict(prefix_len=96, suffix_len=8, requests=6,
-                                max_new=8, max_len=128, kv_block_size=16))
+                                max_new=8, max_len=128, kv_block_size=16),
+             long_prompt=dict(_LONG_PROMPT))
 FULL = dict(n_slots=4, max_len=256, requests=32, max_new=32,
             prompt_lens=(8, 12, 31, 64, 96),
             shared_prefix=dict(prefix_len=192, suffix_len=16, requests=16,
-                               max_new=16, max_len=256, kv_block_size=16))
+                               max_new=16, max_len=256, kv_block_size=16),
+            long_prompt=dict(_LONG_PROMPT))
+
+#: chunked-prefill budget for the open-loop rows: bounds every step's
+#: prefill work AND fixes the budgeted wave shape (n_slots x budget
+#: bucket), so trickling sub-wave arrivals hit the same compiled program
+#: as the closed-loop warmup — no per-arrival-pattern warmup needed
+OPEN_LOOP_PREFILL_BUDGET = 32
 
 # (label, quantize, decode_chunk, fuse_qkv, n_loras, paged)
 MODES = [
@@ -235,26 +259,19 @@ def _serve_open_loop(cfg, params, p, spec: str, label: str,
     at = arrival_times(spec, n, seed=3)
 
     def make():
+        # the prefill budget fixes the wave shape, so sub-wave arrival
+        # patterns reuse the closed-loop warmup's compiled buckets
         return ServeEngine(cfg, params, n_slots=p["n_slots"],
                            max_len=p["max_len"], quantize=True,
                            decode_chunk=8, paged=True, kv_block_size=16,
-                           max_queue=max_queue, admission=admission)
+                           max_queue=max_queue, admission=admission,
+                           prefill_budget=OPEN_LOOP_PREFILL_BUDGET)
 
     if warm is None:
         warm = make()
         for pr in prompts:
             warm.submit(pr, max_new=p["max_new"])
         warm.run()
-        # open-loop arrivals trickle in, so prefill waves smaller than a
-        # full slot set occur; compile those (wave, padded_len) buckets
-        # outside the timed run (the closed-loop warmup only sees full
-        # waves)
-        for wave in range(1, p["n_slots"]):
-            for ln in dict.fromkeys(lens):
-                for _ in range(wave):
-                    warm.submit(rng.integers(0, cfg.vocab_size, size=ln)
-                                .astype(np.int32), max_new=2)
-                warm.run()
     eng = make().adopt_compiled(warm)
     i = 0
     t0 = time.perf_counter()
@@ -297,6 +314,71 @@ def _serve_open_loop(cfg, params, p, spec: str, label: str,
         "ttft_s": _pct(ttft),
         "inter_token_s": _pct(itl),
     }, warm
+
+
+def _serve_long_prompt_interleave(cfg, params, lp: dict, budget):
+    """One multi-thousand-token prompt arrives while short streams are
+    mid-decode. With a chunked-prefill ``budget`` the prompt is consumed
+    in bounded chunks between decode chunks, so the running streams keep
+    ticking; with ``budget=None`` it admits as a single monolithic
+    prefill wave that stalls every stream for the full prompt. Reports
+    the short streams' per-token gap percentiles (timestamps recorded by
+    an ``on_token`` streaming callback — the gap spanning the long
+    prompt's prefill is the head-of-line stall) plus total throughput."""
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(4)
+    shorts = [rng.integers(0, cfg.vocab_size, size=lp["short_len"])
+              .astype(np.int32) for _ in range(lp["n_short"])]
+    long_p = rng.integers(0, cfg.vocab_size,
+                          size=lp["long_len"]).astype(np.int32)
+
+    def make():
+        return ServeEngine(cfg, params, n_slots=lp["n_slots"],
+                           max_len=lp["max_len"], quantize=True,
+                           decode_chunk=8, paged=True,
+                           kv_block_size=lp["kv_block_size"],
+                           prefill_budget=budget)
+
+    def drive(eng):
+        stamps = {}
+
+        def on_token(req, tok):
+            stamps.setdefault(req.rid, []).append(time.perf_counter())
+
+        t0 = time.perf_counter()
+        short_rids = [eng.submit(pr, max_new=lp["max_new"],
+                                 on_token=on_token) for pr in shorts]
+        # every short stream must be emitting before the long prompt
+        # lands — the row measures interference with *running* decodes
+        while not all(stamps.get(r) for r in short_rids):
+            eng.step()
+        eng.submit(long_p, max_new=lp["long_max_new"], on_token=on_token)
+        while eng.step():
+            pass
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in eng.finished)
+        gaps = []
+        for r in short_rids:
+            ts = stamps[r]
+            gaps.extend(float(b - a) for a, b in zip(ts, ts[1:]))
+        return {
+            "prefill_budget": budget,
+            "wall_s": round(wall, 4),
+            "generated_tokens": toks,
+            "tokens_per_sec": round(toks / wall, 2) if wall else 0.0,
+            "short_stream_gap_s": _pct(np.asarray(gaps)),
+        }
+
+    # warmup replays the identical workload (same lengths, same max_new)
+    # so the timed run inherits every (wave, padded_len, blocks) bucket
+    warm = make()
+    for pr in shorts:
+        warm.submit(pr, max_new=lp["max_new"])
+    warm.run()
+    warm.submit(long_p, max_new=lp["long_max_new"])
+    warm.run()
+    return drive(make().adopt_compiled(warm))
 
 
 def _serve_speculative(cfg, params, p, spec_k: int = 4,
@@ -441,6 +523,21 @@ def bench(smoke: bool = True, requests: int = None, prompt_pool=None,
         "steady": steady,
         "overload": over,
     }
+    # long-prompt interleave: a 4k-token prompt arriving mid-decode, with
+    # and without a chunked-prefill budget — the acceptance bars are the
+    # budgeted short-stream p99 gap under its floors ceiling and total
+    # throughput within 20% of the unbudgeted path
+    lp = p["long_prompt"]
+    lp_b = _serve_long_prompt_interleave(cfg, params, lp, lp["budget"])
+    lp_u = _serve_long_prompt_interleave(cfg, params, lp, None)
+    report["long_prompt_interleave"] = {
+        "workload": dict(lp),
+        "budgeted": lp_b,
+        "unbudgeted": lp_u,
+        "throughput_ratio": round(
+            lp_b["tokens_per_sec"] / lp_u["tokens_per_sec"], 3)
+        if lp_u["tokens_per_sec"] else 0.0,
+    }
     # speculative decoding: int8 target + int4 draft vs the target-only
     # int8/chunk8 engine on the identical stream — the acceptance bars are
     # accepted_tokens_per_step > 1 and bit-identical output
@@ -495,6 +592,12 @@ def run():
                      f"{r['arrival']} ttft_p99={r['ttft_s']['p99']}s "
                      f"rej={r['rejected']} exp={r['expired']} "
                      f"pre={r['preempted']}"))
+    li = rep["long_prompt_interleave"]
+    rows.append(("serve/long_prompt_interleave", 0.0,
+                 f"gap_p99={li['budgeted']['short_stream_gap_s']['p99']}s "
+                 f"(unbudgeted "
+                 f"{li['unbudgeted']['short_stream_gap_s']['p99']}s) "
+                 f"tput_ratio={li['throughput_ratio']}"))
     return rows
 
 
@@ -553,6 +656,13 @@ def main(argv=None):
               f"{r['inter_token_s']['p50']}/{r['inter_token_s']['p99']}s, "
               f"rejected={r['rejected']} expired={r['expired']} "
               f"preempted={r['preempted']}")
+    li = rep["long_prompt_interleave"]
+    print(f"long-prompt interleave ({li['workload']['long_len']} tokens "
+          f"mid-decode): short-stream gap p99 "
+          f"{li['budgeted']['short_stream_gap_s']['p99']}s budgeted "
+          f"(budget={li['workload']['budget']}) vs "
+          f"{li['unbudgeted']['short_stream_gap_s']['p99']}s unbudgeted, "
+          f"throughput ratio {li['throughput_ratio']}")
     sd = rep["speculative"]
     print(f"speculative (k={sd['spec_k']}, int{sd['draft_bits']} draft): "
           f"{sd['tokens_per_sec']} tok/s vs target-only "

@@ -42,6 +42,15 @@ Flags of note:
                     requests/s) instead of submitting everything up front;
                     pairs with --admission/--max-queue/--priority/
                     --deadline-s for overload behavior
+  --prefill-budget N  chunked prefill: cap prompt tokens prefilled per
+                    engine step (paged only) so long prompts interleave
+                    with running decodes instead of stalling them
+  --stream          streaming output: tokens emitted via submit(on_token=)
+                    at chunk-harvest time; prints per-stream counts
+  --ttft-deadline-s / --itl-deadline-s
+                    mid-run execution deadlines (time-to-first-token /
+                    inter-token); a stream that blows one finishes as
+                    'expired' with its resources freed
   --stats           print the engine's scheduler stats as JSON
                     (admitted/finished/truncated, tokens/step, occupancy)
 
@@ -182,6 +191,20 @@ def main(argv=None):
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="queue-wait deadline per request; requests not "
                          "admitted in time finish as 'expired'")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="chunked prefill: max prompt tokens prefilled per "
+                         "engine step (paged only; bounds step time so "
+                         "long prompts interleave with decode)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming output: emit tokens through "
+                         "submit(on_token=) at chunk-harvest time and "
+                         "report per-stream counts")
+    ap.add_argument("--ttft-deadline-s", type=float, default=None,
+                    help="execution deadline on time-to-first-token; a "
+                         "request that blows it finishes as 'expired'")
+    ap.add_argument("--itl-deadline-s", type=float, default=None,
+                    help="execution deadline on inter-token latency; a "
+                         "stream that stalls longer finishes as 'expired'")
     ap.add_argument("--speculate", action="store_true",
                     help="self-speculative decoding: a low-bit draft of the "
                          "same model proposes --spec-k tokens per round, the "
@@ -257,7 +280,8 @@ def main(argv=None):
                       max_queue=args.max_queue, admission=args.admission,
                       speculate=args.speculate, spec_k=args.spec_k,
                       draft_bits=args.draft_bits,
-                      draft_mode=args.draft_mode)
+                      draft_mode=args.draft_mode,
+                      prefill_budget=args.prefill_budget)
     rng = np.random.default_rng(0)
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -266,6 +290,15 @@ def main(argv=None):
     adapters = [adapter_cycle[i % len(adapter_cycle)]
                 for i in range(args.requests)]
     prios = [int(x) for x in args.priority.split(",") if x] or [0]
+    streamed = {"tokens": 0, "streams": set()}
+    on_token = None
+    if args.stream:
+        def on_token(req, tok):
+            streamed["tokens"] += 1
+            streamed["streams"].add(req.rid)
+    per_req = dict(on_token=on_token,
+                   ttft_deadline_s=args.ttft_deadline_s,
+                   itl_deadline_s=args.itl_deadline_s)
     t0 = time.time()
     if args.arrival_rate:
         # open-loop: requests land on their own clock; the engine keeps
@@ -279,13 +312,24 @@ def main(argv=None):
                 eng.submit(prompts[i], max_new=args.max_new,
                            adapter=adapters[i],
                            priority=prios[i % len(prios)],
-                           deadline_s=args.deadline_s)
+                           deadline_s=args.deadline_s, **per_req)
                 i += 1
             if eng.step():
                 continue
             if i >= len(prompts):
                 break
             time.sleep(min(0.002, max(0.0, at[i] - (time.time() - t0))))
+        reqs = list(eng.finished)
+    elif args.stream or args.ttft_deadline_s is not None \
+            or args.itl_deadline_s is not None:
+        # closed-loop but per-request streaming/deadline state: submit
+        # explicitly instead of going through generate()
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=args.max_new, adapter=adapters[i],
+                       priority=prios[i % len(prios)],
+                       deadline_s=args.deadline_s, **per_req)
+        while eng.step():
+            pass
         reqs = list(eng.finished)
     else:
         reqs = eng.generate(prompts, max_new=args.max_new,
@@ -309,6 +353,16 @@ def main(argv=None):
               f"{args.admission}]: rejected={st.rejected} "
               f"expired={st.expired} preempted={st.preempted} "
               f"restored={st.restored} ({st.fast_restores} fast)")
+    if args.stream:
+        st = eng.stats
+        print(f"  streaming: {streamed['tokens']} tokens emitted across "
+              f"{len(streamed['streams'])} streams at chunk harvest "
+              f"(cancelled={st.cancelled}, expired={st.expired})")
+    if args.prefill_budget:
+        st = eng.stats
+        print(f"  chunked prefill [budget={args.prefill_budget}]: "
+              f"{st.prefill_chunks} chunks over {st.prefill_waves} waves, "
+              f"{st.preempted_prefill} mid-prefill preemptions")
     if args.speculate:
         st = eng.stats
         print(f"  speculative [k={args.spec_k}, "

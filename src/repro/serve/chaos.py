@@ -3,19 +3,24 @@ the serving stack).
 
 Each scenario drives a `ServeEngine` through a specific failure mode —
 pool exhaustion, prefix-eviction storms, injected dispatch faults,
-bursty priority arrivals against a bounded queue, adapter evict races —
-and then *audits* the engine against two invariants the robustness
-layer guarantees:
+bursty priority arrivals against a bounded queue, adapter evict races,
+long-prompt storms under a chunked-prefill budget, cancellation storms
+against streaming clients — and then *audits* the engine against two
+invariants the robustness layer guarantees:
 
 1. **Zero lost requests.** Every submitted request finishes exactly once
-   with a ``finish_reason`` (generation / rejected / expired); the
-   engine ends drained (no slots held, no queue, no leaked pool blocks,
-   no adapter pins) and the pager's refcount/free-list bookkeeping
-   passes ``check_consistency`` after every step.
+   with a ``finish_reason`` (generation / rejected / expired /
+   cancelled); the engine ends drained (no slots held, no queue, no
+   leaked pool blocks, no adapter pins) and the pager's
+   refcount/free-list bookkeeping passes ``check_consistency`` after
+   every step.
 2. **Zero corrupted requests.** Every request that finished with a
    generation reason produced tokens *bit-identical* to a fault-free
    reference run of the same prompt — including requests that were
-   preempted, swapped out, and restored mid-decode.
+   preempted, swapped out, and restored mid-decode (or mid-prefill
+   under a chunked-prefill budget). A request cut short mid-stream
+   (expired past an execution deadline, or cancelled) must hold a
+   *prefix* of the reference tokens — partial, never corrupted.
 
 Faults are injected three ways, all deterministic:
 
@@ -134,7 +139,9 @@ class ChaosReport:
     finished: int = 0                 # generation outcomes
     rejected: int = 0
     expired: int = 0
+    cancelled: int = 0
     preempted: int = 0
+    preempted_prefill: int = 0
     restored: int = 0
     fast_restores: int = 0
     faults_injected: int = 0
@@ -193,7 +200,9 @@ def _audit(eng: ServeEngine, rid_to_prompt: Dict[int, int],
     report.finished = st.finished
     report.rejected = st.rejected
     report.expired = st.expired
+    report.cancelled = st.cancelled
     report.preempted = st.preempted
+    report.preempted_prefill = st.preempted_prefill
     report.restored = st.restored
     report.fast_restores = st.fast_restores
     seen = {}
@@ -207,10 +216,20 @@ def _audit(eng: ServeEngine, rid_to_prompt: Dict[int, int],
     for rid, r in seen.items():
         if r.finish_reason is None:
             report.errors.append(f"rid {rid} finished without a reason")
-        if r.finish_reason in ("rejected", "expired"):
+        if r.finish_reason == "rejected":
             if r.tokens:
+                report.errors.append(f"rid {rid} was rejected but has "
+                                     f"tokens")
+            continue
+        if r.finish_reason in ("expired", "cancelled"):
+            # cut short mid-stream: whatever the client received must be
+            # a prefix of the fault-free tokens — partial, never corrupt
+            want = reference[rid_to_prompt[rid]]
+            if r.tokens != want[:len(r.tokens)]:
+                report.mismatched += 1
                 report.errors.append(
-                    f"rid {rid} was {r.finish_reason} but has tokens")
+                    f"rid {rid} ({r.finish_reason}) tokens {r.tokens} not "
+                    f"a prefix of fault-free {want}")
             continue
         want = reference[rid_to_prompt[rid]]
         if r.tokens != want:
@@ -459,6 +478,121 @@ def scenario_speculation_storm(params, smoke: bool) -> ChaosReport:
     return report
 
 
+def scenario_long_prompt_storm(params, smoke: bool) -> ChaosReport:
+    """Long prompts under a chunked-prefill budget while a block thief
+    drains the pool: no step may prefill more than the budget, the
+    mid-prefill victim must be preempted with its consumed prefix
+    published (never swapped), and everything — including the long
+    prompts restored from a partial cursor — must finish
+    token-identical to an unbudgeted fault-free run."""
+    report = ChaosReport("long_prompt_storm")
+    budget = 16
+    max_len = 128
+    # shorts first (small rids decode early), longs last (youngest →
+    # preferred preemption victims while still mid-prefill)
+    prompts = [np.arange(8), np.arange(12) + 40, np.arange(9) + 120,
+               np.arange(100) % 256]
+    if not smoke:
+        prompts += [np.arange(20) + 11, np.arange(100) + 50]
+    ref = ServeEngine(CFG, params, n_slots=4, max_len=max_len)
+    reference = ref.generate(prompts, max_new=MAX_NEW)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=max_len, paged=True,
+                      kv_block_size=BLOCK, decode_chunk=1,
+                      prefill_budget=budget)
+    thief = BlockThief(steal=10_000, hold_steps=5, start_step=1)
+    seen = {"prefill_tokens": 0}
+
+    def storm(e):
+        thief.on_step(e)
+        delta = e.stats.prefill_tokens - seen["prefill_tokens"]
+        seen["prefill_tokens"] = e.stats.prefill_tokens
+        if delta > budget:
+            report.errors.append(
+                f"a step prefilled {delta} tokens > budget {budget}")
+
+    rid_to_prompt = _submit_all(eng, prompts, report)
+    try:
+        _drive(eng, report, post_step=storm, thief=thief)
+    finally:
+        thief.release(eng)
+    _drive(eng, report, post_step=storm)
+    _audit(eng, rid_to_prompt, reference, report)
+    if report.preempted_prefill == 0 and report.errors == []:
+        report.errors.append("the storm never preempted a mid-prefill "
+                             "slot (thief too weak / prompts too short?)")
+    if eng.stats.prefill_chunks <= report.submitted and report.errors == []:
+        report.errors.append("prefill was never actually chunked")
+    return report
+
+
+def scenario_cancel_storm(params, smoke: bool) -> ChaosReport:
+    """Cancellation at every lifecycle point — while queued, mid-prefill
+    chunk, mid-decode, and a streaming client whose callback raises
+    StopStream — with the rest of the workload still running: every
+    teardown must balance the books (slot, blocks, pins), a cancelled
+    stream may hold only a prefix of the fault-free tokens, and the
+    surviving streams must stay bit-identical."""
+    from repro.serve.engine import StopStream
+    report = ChaosReport("cancel_storm")
+    prompts = WORKLOAD[:6] if smoke else WORKLOAD
+    reference = _reference(params, prompts)
+    # budget=8 forces the 31-token prompt through multiple chunks (a
+    # mid-prefill cancel window); decode_chunk=1 keeps streams in
+    # flight across steps (a mid-decode cancel window)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=MAX_LEN, paged=True,
+                      kv_block_size=BLOCK, decode_chunk=1,
+                      prefill_budget=8)
+    hangup = {"tokens": 0}
+
+    def client(req, tok):
+        hangup["tokens"] += 1
+        if hangup["tokens"] >= 2:
+            raise StopStream()         # client went away mid-stream
+
+    rid_to_prompt = {}
+    for i, p in enumerate(prompts):
+        kw = {"on_token": client} if i == 1 else {}
+        rid_to_prompt[eng.submit(p, MAX_NEW, **kw)] = i
+        report.submitted += 1
+    by_prompt = {v: k for k, v in rid_to_prompt.items()}
+    rid_prefill, rid_decode = by_prompt[2], by_prompt[3]
+    if not eng.cancel(by_prompt[4]):   # cancel while still queued
+        report.errors.append("queued cancel returned False")
+    fired = {"prefill": False, "decode": False}
+
+    def storm(e):
+        if not fired["prefill"]:
+            for s in e.slots:
+                if s is not None and s.rid == rid_prefill and s.prefilling:
+                    e.cancel(rid_prefill)
+                    fired["prefill"] = True
+        if not fired["decode"]:
+            for s in e.slots:
+                if (s is not None and s.rid == rid_decode
+                        and not s.prefilling and s.tokens):
+                    e.cancel(rid_decode)
+                    fired["decode"] = True
+
+    _drive(eng, report, post_step=storm)
+    _audit(eng, rid_to_prompt, reference, report)
+    for point, did in fired.items():
+        if not did:
+            report.errors.append(f"mid-{point} cancel never found its "
+                                 f"target in a slot")
+    if hangup["tokens"] < 2:
+        report.errors.append("the StopStream client never saw 2 tokens")
+    if report.cancelled != 4:
+        report.errors.append(f"expected 4 cancelled, got "
+                             f"{report.cancelled}")
+    # with every stream torn down or finished, evicting the cached
+    # prefixes must drain the pool to zero — nothing leaked
+    eng.pager.evict_prefixes()
+    if eng.pager.blocks_in_use:
+        report.errors.append(f"{eng.pager.blocks_in_use} pool blocks "
+                             f"leaked after cancel teardown")
+    return report
+
+
 SCENARIOS = {
     "pool_exhaustion": scenario_pool_exhaustion,
     "eviction_storm": scenario_eviction_storm,
@@ -466,6 +600,8 @@ SCENARIOS = {
     "burst_arrivals": scenario_burst_arrivals,
     "adapter_race": scenario_adapter_race,
     "speculation_storm": scenario_speculation_storm,
+    "long_prompt_storm": scenario_long_prompt_storm,
+    "cancel_storm": scenario_cancel_storm,
 }
 
 

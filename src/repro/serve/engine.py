@@ -110,6 +110,39 @@ Scheduler contract
   prefill/decode dispatch, and any exception there rolls admission back,
   requeues the wave (adapter pins intact) and leaves the decode step
   idempotently retryable.
+- **Chunked prefill (`prefill_budget=N`, paged only).** Bounded step
+  time, Sarathi-style: every `step()` spends at most N prompt tokens on
+  prefill work (first chunks and continuations combined), so a long
+  prompt is consumed over several steps *interleaved with decode chunks*
+  instead of stalling every running stream behind one all-or-nothing
+  wave. A partially prefilled slot carries a block-aligned
+  `prefill_cursor` (non-final chunks are floored to whole KV blocks),
+  allocates blocks per chunk (`PagedKVCache.extend`, all-or-nothing) and
+  publishes each consumed chunk into the radix index immediately; its
+  block-table row is masked to the trash block for decode dispatches
+  (the scan writes KV unconditionally for every row). Mid-prefill
+  preemption publishes the consumed prefix and re-admits through the
+  normal prefill path, where the radix match re-hits it —
+  token-identical, no swap state. Budgeted waves draw their shape from
+  a small fixed lattice — pow2 width buckets up to `n_slots`, pow2
+  length buckets capped by the budget — so compile count is bounded and
+  independent of arrival pattern without padding single-request chunks
+  to the full slot set. Greedy output is bit-identical to unbudgeted
+  serving.
+- **Streaming + cancellation.** `submit(on_token=...)` fires the
+  callback per token at chunk harvest (prefill first-token, decode
+  chunk, speculative round); `stream()` wraps submit + step into a
+  generator. `cancel(rid)` — or the callback raising `StopStream` —
+  tears a request down mid-stream: slot, KV blocks, and adapter pin
+  released, published prefix blocks kept for other requests,
+  `finish_reason="cancelled"` with the partial tokens retained.
+  `t_first` is stamped at actual first-token *emission* (the TTFT base).
+- **Execution deadlines.** Beyond `deadline_s` (queue wait),
+  `submit(ttft_deadline_s=, itl_deadline_s=)` bound time-to-first-token
+  and the inter-token gap *while running*: a request that blows either
+  finishes with `finish_reason="expired"`, keeps its partial tokens,
+  and frees every resource — checked each step against the injectable
+  clock, wherever the request sits (queued, mid-prefill, or decoding).
 - **Speculative decoding (`speculate=True`).** The quantization ladder
   doubles as a draft model: `core.quantization.derive_draft_params`
   re-quantizes the raw weights to `draft_bits` (affine/codebook, or the
@@ -159,9 +192,20 @@ from repro.dist import sharding as shd
 from repro.models.model import ModelAPI, get_model
 from repro.serve.adapters import AdapterRegistry
 from repro.serve.decode import decode_steps, verify_steps
-from repro.serve.paged_cache import PagedKVCache
-from repro.serve.scheduler import WaitQueue, pick_victim
+from repro.serve.paged_cache import TRASH_BLOCK, PagedKVCache
+from repro.serve.scheduler import WaitQueue, pick_victim, prefill_chunk
 from repro.serve.speculative import accept_length, round_k
+
+
+class StopStream(Exception):
+    """Raise from an ``on_token`` callback to cancel the stream.
+
+    The engine catches it at the emission site and tears the request
+    down exactly like :meth:`ServeEngine.cancel`: slot freed, KV blocks
+    released (published prefixes survive in the radix index), adapter
+    pin dropped, ``finish_reason="cancelled"``. Tokens appended before
+    the raise stay on the request.
+    """
 
 
 @dataclasses.dataclass
@@ -204,10 +248,21 @@ class Request:
     finish_reason: Optional[str] = None   # eos / max_new / cache_full /
                                           # rejected / expired / cancelled
     t_submit: float = 0.0             # engine-clock submit time
-    t_first: Optional[float] = None   # first-token time (TTFT base)
+    t_first: Optional[float] = None   # first-token *emission* time (TTFT)
     t_last: Optional[float] = None    # last-token time (ITL base)
     preemptions: int = 0              # times swapped out of a slot
     _swap: Optional[SwapState] = None     # host tail KV while preempted
+    # streaming: per-token callback fired at chunk harvest; raising
+    # StopStream from it cancels the request mid-stream
+    on_token: Optional[object] = None
+    # execution deadlines (beyond deadline_s's queue-wait bound)
+    ttft_deadline_s: Optional[float] = None   # submit -> first emission
+    itl_deadline_s: Optional[float] = None    # max gap between tokens
+    # chunked prefill: a seated slot may hold only a prefix of its prompt
+    prefilling: bool = False          # seated but prompt not fully consumed
+    prefill_cursor: int = 0           # admission-seq tokens consumed so far
+    _emitted: int = 0                 # tokens already streamed to on_token
+    _admitted: bool = False           # counted in stats.admitted (vs restore)
 
 
 @dataclasses.dataclass
@@ -232,10 +287,14 @@ class EngineStats:
     cow_copies: int = 0
     # robustness: admission-control and preemption outcomes
     rejected: int = 0                 # shed by the admission policy
-    expired: int = 0                  # deadline passed while queued
+    expired: int = 0                  # deadline passed (queued or mid-run)
     preempted: int = 0                # swap-outs of running slots
     restored: int = 0                 # re-admissions after preemption
     fast_restores: int = 0            # restores that skipped recompute
+    # streaming + chunked prefill
+    cancelled: int = 0                # torn down by cancel()/StopStream
+    prefill_chunks: int = 0           # budgeted prefill chunks executed
+    preempted_prefill: int = 0        # preemptions of mid-prefill slots
     # speculative decoding (speculate=True): draft/verify round outcomes
     spec_rounds: int = 0              # engine-level draft+verify rounds
     spec_slot_rounds: int = 0         # sum over rounds of speculating slots
@@ -363,7 +422,8 @@ class ServeEngine:
                  clock=None,
                  fault_hook=None,
                  speculate: bool = False, spec_k: int = 4,
-                 draft_bits: int = 4, draft_mode: str = "affine"):
+                 draft_bits: int = 4, draft_mode: str = "affine",
+                 prefill_budget: Optional[int] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "ServeEngine drives token-only prefill; encoder-decoder "
@@ -407,6 +467,30 @@ class ServeEngine:
         self.paged = paged
         self.kv_block_size = kv_block_size
         self.prefix_cache = prefix_cache
+        self.prefill_budget = prefill_budget
+        if prefill_budget is not None:
+            if not paged:
+                raise ValueError(
+                    "prefill_budget requires paged=True: chunked prefill "
+                    "allocates and publishes KV one block at a time, which "
+                    "the dense per-slot cache cannot express")
+            if speculate:
+                raise ValueError(
+                    "prefill_budget is incompatible with speculate=True: "
+                    "the draft cache is dense and prefills whole sequences "
+                    "in one wave, so a mid-prefill slot would enter a "
+                    "speculative round with no draft KV behind its cursor — "
+                    "serve chunked prefill without speculation (or "
+                    "speculation without a budget)")
+            if prefill_budget < kv_block_size:
+                raise ValueError(
+                    f"prefill_budget={prefill_budget} is below one KV block "
+                    f"(kv_block_size={kv_block_size}): a non-final chunk is "
+                    "floored to whole blocks, so no chunk could ever make "
+                    "progress")
+        # per-step chunked-prefill ledger (reset at the top of _step)
+        self._prefill_left = prefill_budget
+        self._prefill_progress = False
         if paged:
             if self.api.init_paged_cache is None:
                 raise ValueError(
@@ -614,7 +698,10 @@ class ServeEngine:
 
     def submit(self, prompt, max_new: int = 32,
                adapter: Optional[str] = None, priority: int = 0,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               on_token=None,
+               ttft_deadline_s: Optional[float] = None,
+               itl_deadline_s: Optional[float] = None) -> int:
         """Queue a prompt ([S] ints) for generation; returns a request id.
 
         adapter: name of a registered LoRA adapter to serve this request
@@ -629,7 +716,20 @@ class ServeEngine:
         tokens. When the queue is at ``max_queue`` the engine's admission
         policy decides: "block" drives ``step()`` until a position frees,
         "reject" / "evict" shed a request (``finish_reason="rejected"``)
-        without raising — read the outcome off the finished list/stats."""
+        without raising — read the outcome off the finished list/stats.
+
+        on_token: streaming callback ``f(request, token)`` fired for each
+        token as the engine harvests it (chunk boundaries, not at finish).
+        Raising :class:`StopStream` from it cancels the request mid-stream
+        — slot, KV blocks, and adapter pin released, tokens appended so
+        far kept, ``finish_reason="cancelled"``. Any other exception
+        propagates out of ``step()``.
+        ttft_deadline_s / itl_deadline_s: *execution* deadlines enforced
+        mid-run (``deadline_s`` only bounds queue wait): a request that
+        has not emitted its first token ``ttft_deadline_s`` seconds after
+        submit, or whose gap since the last harvested token exceeds
+        ``itl_deadline_s``, finishes with ``finish_reason="expired"``
+        keeping its partial tokens; slot and blocks are freed."""
         if adapter is not None and self.registry is None:
             raise ValueError(
                 "submit(adapter=...) needs an engine built with "
@@ -651,7 +751,9 @@ class ServeEngine:
         req = Request(self._rid, prompt, max_new,
                       prompt_truncated=prompt_truncated, adapter=adapter,
                       priority=priority, deadline_s=deadline_s,
-                      t_submit=self._now())
+                      t_submit=self._now(), on_token=on_token,
+                      ttft_deadline_s=ttft_deadline_s,
+                      itl_deadline_s=itl_deadline_s)
         self._rid += 1
         dec = self.queue.offer(req)
         while dec.must_block:
@@ -700,7 +802,22 @@ class ServeEngine:
         recomputes). The request re-enters the queue with its original
         rid, i.e. ahead of its priority class."""
         r = self.slots[i]
-        if self.paged:
+        if self.paged and r.prefilling:
+            # a mid-prefill victim's consumed prefix is whole blocks (the
+            # cursor is block-aligned): publish them and drop the slot —
+            # no host tail to save, no SwapState. Re-admission goes back
+            # through the normal prefill path, where the radix match
+            # re-hits the published prefix, so the restore is
+            # token-identical without carrying any device state.
+            if r.adapter is None:
+                self.pager.insert(self._admission_seq(r)[:r.prefill_cursor],
+                                  self.pager.slot_blocks(i))
+            r.prefilling = False
+            r.prefill_cursor = 0
+            self.pager.release_slot(i)
+            self.stats.blocks_in_use = self.pager.blocks_in_use
+            self.stats.preempted_prefill += 1
+        elif self.paged:
             seq = self._kv_seq(r)
             bs = self.kv_block_size
             full = len(seq) // bs
@@ -776,11 +893,145 @@ class ServeEngine:
                 break
             self._preempt_slot(victim)
 
+    # -- execution deadlines (TTFT / inter-token) -------------------------------
+    def _deadline_passed(self, r: Request, now: float) -> bool:
+        if r.ttft_deadline_s is not None and r.t_first is None \
+                and now - r.t_submit > r.ttft_deadline_s:
+            return True
+        if r.itl_deadline_s is not None and r.t_last is not None \
+                and now - r.t_last > r.itl_deadline_s:
+            return True
+        return False
+
+    def _expire_deadlines(self):
+        """Enforce per-request TTFT and inter-token deadlines mid-run.
+
+        ``deadline_s`` (queue-wait) is checked by ``WaitQueue.expire``;
+        this sweep covers the *execution* deadlines everywhere a request
+        can be: still queued (a preempted request counts), mid-prefill,
+        or decoding in a slot. An expired runner keeps its partial tokens
+        (``finish_reason="expired"``), publishes its reusable KV prefix
+        and frees slot/blocks/pin — the books stay balanced."""
+        now = self._now()
+        dead = [r for r in self.queue if self._deadline_passed(r, now)]
+        for r in dead:
+            self.queue.remove(r)
+            self._finish(r, "expired")
+        for i, r in enumerate(self.slots):
+            if r is not None and self._deadline_passed(r, now):
+                self._teardown_slot(i)
+                self._finish(r, "expired")
+
+    def _teardown_slot(self, i: int):
+        """Release slot ``i``'s resources without finishing its request:
+        publish the reusable KV prefix (full blocks of the sequence the
+        slot actually holds — ``_kv_seq`` for a decoding slot, the
+        block-aligned prefix cursor for a mid-prefill one), release the
+        slot's pool blocks, and clear the slot row. Callers own the
+        ``_finish`` bookkeeping."""
+        r = self.slots[i]
+        if self.paged:
+            if r.adapter is None:
+                seq = (self._admission_seq(r)[:r.prefill_cursor]
+                       if r.prefilling else self._kv_seq(r))
+                self.pager.insert(seq, self.pager.slot_blocks(i))
+            self.pager.release_slot(i)
+            self.stats.blocks_in_use = self.pager.blocks_in_use
+        self.slots[i] = None
+        self.adapter_slots[i] = -1
+
+    # -- streaming (per-token emission + cancellation) ---------------------------
+    def _emit(self, r: Request, now: float) -> bool:
+        """Stream tokens appended since the last harvest to ``on_token``.
+
+        Stamps ``t_first`` at the first *actual emission* (the TTFT base
+        — previously over-stated by stamping at wave granularity) and
+        advances the per-request emission cursor. Returns True when the
+        callback raised :class:`StopStream`: the caller must tear the
+        request down as cancelled unless a stop reason already finished
+        it. Any other callback exception propagates."""
+        new = r.tokens[r._emitted:]
+        if not new:
+            return False
+        if r.t_first is None:
+            r.t_first = now
+        if r.on_token is None:
+            r._emitted = len(r.tokens)
+            return False
+        for t in new:
+            r._emitted += 1
+            try:
+                r.on_token(r, int(t))
+            except StopStream:
+                # the client consumed exactly ``_emitted`` tokens; drop
+                # the rest of this harvest so the cancelled request's
+                # token list matches what was actually streamed
+                del r.tokens[r._emitted:]
+                return True
+        return False
+
+    def cancel(self, rid: int) -> bool:
+        """Tear down a queued or in-flight request mid-stream.
+
+        The request finishes with ``finish_reason="cancelled"`` keeping
+        the tokens emitted so far; its slot, KV blocks (published full
+        prefix blocks stay in the radix index for other requests), and
+        adapter pin are all released. Returns True when the request was
+        live and is now cancelled; False when it already finished
+        (cancel lost the race — the result stands). Unknown rids raise
+        KeyError."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self._teardown_slot(i)
+                self._finish(s, "cancelled")
+                return True
+        for r in list(self.queue):
+            if r.rid == rid:
+                self.queue.remove(r)
+                self._finish(r, "cancelled")
+                return True
+        if any(r.rid == rid for r in self.finished):
+            return False
+        raise KeyError(f"request {rid} not found")
+
+    def stream(self, prompt, max_new: int = 32, **kw):
+        """Generator yielding tokens for one request as they are produced.
+
+        Submits the prompt and drives ``step()`` internally, yielding
+        each harvested token. Closing the generator early (``break``,
+        ``.close()``, GC) cancels the request and releases every
+        resource it held — the teardown path a disappearing client
+        needs. Extra keyword arguments pass through to :meth:`submit`;
+        a caller ``on_token`` is composed in front of the stream's own
+        buffering (and may still raise :class:`StopStream`)."""
+        buf: List[int] = []
+        user_cb = kw.pop("on_token", None)
+
+        def tap(req, tok):
+            if user_cb is not None:
+                user_cb(req, tok)       # StopStream propagates to the engine
+            buf.append(tok)
+
+        rid = self.submit(prompt, max_new, on_token=tap, **kw)
+        try:
+            while True:
+                while buf:
+                    yield buf.pop(0)
+                if any(r.rid == rid for r in self.finished):
+                    return
+                if not self.step():
+                    return              # drained with the request resolved
+        finally:
+            if not any(r.rid == rid for r in self.finished):
+                self.cancel(rid)
+
     # -- prefill waves ---------------------------------------------------------
     def _admit(self):
         for r in self.queue.expire(self._now()):
             self._finish(r, "expired")
+        self._expire_deadlines()
         self._priority_preempt()
+        self._continue_prefill()
         free = self._free_slots()
         if not free or not self.queue:
             return
@@ -892,8 +1143,8 @@ class ServeEngine:
         src, dst = [], []
         for i, r in enumerate(group):
             r.tokens.append(int(first[i]))
-            if r.t_first is None:
-                r.t_first = now
+            if not r._admitted:
+                r._admitted = True
                 self.stats.admitted += 1
                 if r.adapter is not None:
                     self.stats.lora_requests += 1
@@ -902,7 +1153,10 @@ class ServeEngine:
             r.t_last = now
             r._swap = None
             self.stats.prefill_tokens += int(lengths[i])
+            want_cancel = self._emit(r, now)
             reason = self._stop_reason(r)
+            if reason is None and want_cancel:
+                reason = "cancelled"
             if reason is not None:
                 self._finish(r, reason)   # EOS/max_new on the first token
                 continue
@@ -1011,32 +1265,51 @@ class ServeEngine:
         blocks). An exception during the prefill dispatch rolls every
         admitted request's blocks back and requeues the wave."""
         pgr, bs = self.pager, self.kv_block_size
+        budgeted = self.prefill_budget is not None
         admitted, slots_for = [], []    # slots are assigned up front: block
         seqs, hits, hit_toks = [], [], []   # ownership needs a table
+        takes = []                      # suffix tokens consumed THIS wave
         for r in group:
             seq = self._admission_seq(r)
             # LoRA requests bypass the prefix index: adapters targeting
             # wk/wv make the KV adapter-specific, so sharing it across
             # adapters (or with the base model) would be silently wrong
             hit, ht = pgr.match(seq) if r.adapter is None else ([], 0)
+            take = len(seq) - ht
+            if budgeted:
+                take = prefill_chunk(take, self._prefill_left, bs)
+                if take == 0:
+                    self.queue.push_front(r)   # step's budget spent
+                    continue
             slot = free[0]
-            if not pgr.admit(slot, hit, math.ceil((len(seq) - ht) / bs)):
+            if not pgr.admit(slot, hit, math.ceil(take / bs)):
                 self.queue.push_front(r)     # defer: pool dry right now
                 continue
             free.pop(0)
+            if budgeted:
+                self._prefill_left -= take
             admitted.append(r)
             slots_for.append(slot)
             seqs.append(seq)
             hits.append(hit)
             hit_toks.append(ht)
+            takes.append(take)
         if not admitted:
             return
         w = len(admitted)
-        wb = _pow2_bucket(w, 1, self.n_slots)
         max_ctx = self.max_blocks * bs
-        pl = _pow2_bucket(max(len(s) - ht
-                              for s, ht in zip(seqs, hit_toks)),
-                          bs, max_ctx)
+        wb = _pow2_bucket(w, 1, self.n_slots)
+        if budgeted:
+            # chunk length is bounded by the budget, so (wb, pl) comes
+            # from a small fixed lattice — O(log slots x log budget)
+            # compiles (first chunks here, continuations in
+            # _continue_prefill) regardless of arrival pattern, without
+            # padding a lone chunk to the full slot set
+            pl = _pow2_bucket(max(takes), bs,
+                              min(max_ctx, _pow2_bucket(
+                                  self.prefill_budget, bs, max_ctx)))
+        else:
+            pl = _pow2_bucket(max(takes), bs, max_ctx)
         npb_max = max((len(h) for h in hits), default=0)
         npb = _pow2_bucket(npb_max, 1, self.max_blocks) if npb_max else 0
         toks = np.zeros((wb, pl), np.int32)
@@ -1046,13 +1319,13 @@ class ServeEngine:
         sbt = np.zeros((wb, pl // bs), np.int32)
         aidx = np.full((wb,), -1, np.int32)
         for i, (r, slot) in enumerate(zip(admitted, slots_for)):
-            suffix = seqs[i][hit_toks[i]:]
-            toks[i, : len(suffix)] = suffix
-            lengths[i] = len(suffix)
+            chunk = seqs[i][hit_toks[i]: hit_toks[i] + takes[i]]
+            toks[i, : len(chunk)] = chunk
+            lengths[i] = len(chunk)
             prefix_len[i] = hit_toks[i]
             nh = len(hits[i])
             pbt[i, :nh] = hits[i]
-            nsb = math.ceil(len(suffix) / bs)
+            nsb = math.ceil(len(chunk) / bs)
             sbt[i, :nsb] = pgr.tables[slot, nh: nh + nsb]
             if r.adapter is not None:
                 aidx[i] = self.registry.index_of(r.adapter)
@@ -1077,24 +1350,47 @@ class ServeEngine:
         first = self._sample(logits)
         now = self._now()
         for i, (r, slot) in enumerate(zip(admitted, slots_for)):
-            r.tokens.append(int(first[i]))
-            if r.t_first is None:
-                r.t_first = now
+            if not r._admitted:
+                r._admitted = True
                 self.stats.admitted += 1
                 if r.adapter is not None:
                     self.stats.lora_requests += 1
             else:
                 self.stats.restored += 1    # recompute restore
-            r.t_last = now
             r._swap = None
             self.stats.prefill_tokens += int(lengths[i])
             self.stats.prefix_hit_tokens += hit_toks[i]
+            if budgeted:
+                self.stats.prefill_chunks += 1
+                self._prefill_progress = True
+            if hit_toks[i] + takes[i] < len(seqs[i]):
+                # partial first chunk: the slot seats mid-prefill with a
+                # block-aligned cursor and NO token (the chunk's last-
+                # position logits are mid-prompt and discarded — greedy
+                # output stays bit-identical to an unbudgeted prefill).
+                # Publish the consumed whole blocks now so concurrent
+                # requests (and a preemption/restore) reuse them.
+                r.prefilling = True
+                r.prefill_cursor = hit_toks[i] + takes[i]
+                if r.adapter is None:
+                    pgr.insert(seqs[i][:r.prefill_cursor],
+                               pgr.slot_blocks(slot))
+                self.slots[slot] = r
+                self.adapter_slots[slot] = aidx[i]
+                continue
+            r.tokens.append(int(first[i]))
+            r.prefilling = False
+            r.prefill_cursor = len(seqs[i])
+            r.t_last = now
             # publish the sequence's full blocks now: requests in later
             # waves reuse this prefill while the slot is still decoding
             # (base model only — LoRA KV is adapter-specific, see above)
             if r.adapter is None:
                 pgr.insert(seqs[i], pgr.slot_blocks(slot))
+            want_cancel = self._emit(r, now)
             reason = self._stop_reason(r)
+            if reason is None and want_cancel:
+                reason = "cancelled"
             if reason is not None:
                 pgr.release_slot(slot)
                 self._finish(r, reason)   # EOS/max_new on the first token
@@ -1104,6 +1400,135 @@ class ServeEngine:
             self.adapter_slots[slot] = aidx[i]
         if self.speculate:
             self._draft_prefill_paged(admitted, slots_for, seqs)
+        self.stats.prefill_waves += 1
+        self.stats.blocks_in_use = pgr.blocks_in_use
+
+    def _continue_prefill(self):
+        """Advance every mid-prefill slot by one budgeted chunk.
+
+        Runs at the top of admission, before new requests compete for
+        the step's prefill budget: in-flight prompts finish sooner,
+        which frees slots faster. All continuations batch into ONE wave
+        through the same jitted paged-prefill bucket the first chunks
+        use (prefix = the slot's own consumed blocks, suffix = the next
+        chunk), so arrival patterns never grow the compile space."""
+        if self.prefill_budget is None:
+            return
+        bs = self.kv_block_size
+        items = []                      # (slot, request, seq, take)
+        for i, r in enumerate(self.slots):
+            if r is None or not r.prefilling:
+                continue
+            seq = self._admission_seq(r)
+            take = prefill_chunk(len(seq) - r.prefill_cursor,
+                                 self._prefill_left, bs)
+            if take == 0:
+                continue                # step budget exhausted
+            self._prefill_left -= take
+            items.append((i, r, seq, take))
+        if not items:
+            return
+        t0 = time.perf_counter()
+        try:
+            self._continue_prefill_wave(items)
+        finally:
+            self.stats.prefill_wall_s += time.perf_counter() - t0
+
+    def _continue_prefill_wave(self, items):
+        """One continuation wave. Block allocation is all-or-nothing per
+        slot (``pager.extend``); when the pool cannot cover the wave's
+        plan, victims are preempted (mid-prefill slots included) until it
+        can or one slot remains. A fault during the dispatch rolls the
+        extension back to the cursor (``pager.truncate``) — the slots
+        stay seated and a retried step re-runs the identical chunk."""
+        pgr, bs = self.pager, self.kv_block_size
+        while True:
+            need = sum(math.ceil(take / bs) for _, _, _, take in items)
+            if pgr.can_allocate(need):
+                break
+            if sum(s is not None for s in self.slots) <= 1:
+                break                   # per-slot extend() defers below
+            victim = pick_victim(self.slots)
+            self._preempt_slot(victim)
+            items = [it for it in items if it[0] != victim]
+            if not items:
+                return
+        ran = []
+        for slot, r, seq, take in items:
+            if pgr.extend(slot, math.ceil(take / bs)):
+                ran.append((slot, r, seq, take))
+            # else: chunk deferred to the next step, slot stays seated
+        if not ran:
+            return
+        max_ctx = self.max_blocks * bs
+        # same bucket lattice as budgeted admission waves: pow2 width,
+        # pow2 length capped by the budget
+        wb = _pow2_bucket(len(ran), 1, self.n_slots)
+        pl = _pow2_bucket(max(t for *_, t in ran), bs,
+                          min(max_ctx, _pow2_bucket(self.prefill_budget,
+                                                    bs, max_ctx)))
+        npb = _pow2_bucket(max(r.prefill_cursor // bs
+                               for _, r, _, _ in ran), 1, self.max_blocks)
+        toks = np.zeros((wb, pl), np.int32)
+        lengths = np.ones((wb,), np.int32)
+        prefix_len = np.zeros((wb,), np.int32)
+        pbt = np.zeros((wb, npb), np.int32)
+        sbt = np.zeros((wb, pl // bs), np.int32)
+        aidx = np.full((wb,), -1, np.int32)
+        for j, (slot, r, seq, take) in enumerate(ran):
+            cur = r.prefill_cursor      # block-aligned by construction
+            toks[j, :take] = seq[cur: cur + take]
+            lengths[j] = take
+            prefix_len[j] = cur
+            nh = cur // bs
+            pbt[j, :nh] = pgr.tables[slot, :nh]
+            nsb = math.ceil(take / bs)
+            sbt[j, :nsb] = pgr.tables[slot, nh: nh + nsb]
+            aidx[j] = self.adapter_slots[slot]
+        fn = self._get_paged_prefill(wb, pl, npb)
+        args = [self.cache, self.params, jnp.asarray(toks),
+                jnp.asarray(lengths), jnp.asarray(prefix_len),
+                jnp.asarray(pbt), jnp.asarray(sbt)]
+        if self.registry is not None:
+            args += [self.registry.stacked, jnp.asarray(aidx)]
+        try:
+            if self.fault_hook is not None:
+                self.fault_hook("prefill")
+            logits, self.cache = fn(*args)
+        except Exception:
+            # roll the extension back to the cursor: the slots stay
+            # seated mid-prefill and a retried step re-plans the exact
+            # same chunk (deterministic, so retry is token-identical)
+            for slot, r, _, _ in ran:
+                pgr.truncate(slot, r.prefill_cursor)
+            self.stats.blocks_in_use = pgr.blocks_in_use
+            raise
+        first = self._sample(logits)
+        now = self._now()
+        for j, (slot, r, seq, take) in enumerate(ran):
+            r.prefill_cursor += take
+            self.stats.prefill_tokens += take
+            self.stats.prefill_chunks += 1
+            self._prefill_progress = True
+            if r.adapter is None:
+                pgr.insert(seq[:r.prefill_cursor], pgr.slot_blocks(slot))
+            if r.prefill_cursor < len(seq):
+                continue                # still mid-prompt
+            # final chunk: the wave's last-position logits are the real
+            # end-of-prompt logits — sample the first token and hand the
+            # slot to decode
+            r.prefilling = False
+            r.tokens.append(int(first[j]))
+            r.t_last = now
+            want_cancel = self._emit(r, now)
+            reason = self._stop_reason(r)
+            if reason is None and want_cancel:
+                reason = "cancelled"
+            if reason is not None:
+                pgr.release_slot(slot)
+                self._finish(r, reason)
+                self.slots[slot] = None
+                self.adapter_slots[slot] = -1
         self.stats.prefill_waves += 1
         self.stats.blocks_in_use = pgr.blocks_in_use
 
@@ -1164,11 +1589,13 @@ class ServeEngine:
     def _finish(self, r: Request, reason: str):
         """Terminal bookkeeping for every outcome. ``finished`` (the list)
         holds all of them; ``stats.finished`` counts only generation
-        outcomes (eos/max_new/cache_full) — rejected/expired requests
-        produced no tokens and are tallied separately."""
+        outcomes (eos/max_new/cache_full) — rejected requests produced no
+        tokens, and expired/cancelled ones may carry a partial stream;
+        all three are tallied separately."""
         r.done = True
         r.finish_reason = reason
         r._swap = None
+        r.prefilling = False
         if r.adapter is not None:
             self.registry.release(r.adapter)   # unpin: evict becomes legal
         self.finished.append(r)
@@ -1177,6 +1604,9 @@ class ServeEngine:
             return
         if reason == "expired":
             self.stats.expired += 1
+            return
+        if reason == "cancelled":
+            self.stats.cancelled += 1
             return
         self.stats.finished += 1
         if r.truncated:
@@ -1420,6 +1850,9 @@ class ServeEngine:
                 # (prompt ++ tokens[:-1]); whole tail blocks written for
                 # rejected positions return to the pool
                 self.pager.truncate(i, positions[i] + got)
+            want_cancel = self._emit(r, now)
+            if reason is None and want_cancel:
+                reason = "cancelled"
             if reason is not None:
                 if self.paged:
                     if r.adapter is None:
@@ -1463,6 +1896,12 @@ class ServeEngine:
                           max_n if max_n is not None else remaining))
 
     def _step(self, max_n: Optional[int] = None) -> bool:
+        if self.prefill_budget is not None:
+            # per-STEP prefill-token ledger: first chunks and
+            # continuations both draw from it, so no single engine step
+            # ever does more prefill work than the budget
+            self._prefill_left = self.prefill_budget
+            self._prefill_progress = False
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         while not active and self.queue:
@@ -1484,18 +1923,35 @@ class ServeEngine:
                     f"(num_blocks={getattr(self, 'num_blocks', None)})")
         if not active:
             return False
+        # mid-prefill slots hold blocks but have no token to decode yet;
+        # they sit out the decode dispatch (their block-table rows are
+        # masked to trash below so the scan's unconditional KV writes
+        # cannot touch their real blocks)
+        decode_active = [i for i in active if not self.slots[i].prefilling]
+        if not decode_active:
+            if self._prefill_progress:
+                return True             # prefill-only step: work happened
+            # nothing decodable and no chunk ran (budget spent before
+            # these slots, or the pool deferred every extension): preempt
+            # one victim so the freed blocks guarantee the next step
+            # makes progress instead of spinning
+            victim = pick_victim(self.slots)
+            if victim is not None:
+                self._preempt_slot(victim)
+                return True
+            return False
         if self.speculate:
-            return self._spec_step(active, max_n)
-        n = self._chunk_len(active, max_n)
+            return self._spec_step(decode_active, max_n)
+        n = self._chunk_len(decode_active, max_n)
         if self.paged:
             # plan -> commit: reserve the whole write window's block
             # budget before touching the pool, preempting the lowest-
             # priority slot while the window cannot fit. A single slot
             # always fits (pool >= per-slot max + trash), so this
             # terminates with at least one runner.
-            while len(active) > 1:
+            while True:
                 need = 0
-                for i in active:
+                for i in decode_active:
                     r = self.slots[i]
                     pos0 = len(r.prompt) + len(r.tokens) - 1
                     rem = min(r.max_new - len(r.tokens),
@@ -1505,15 +1961,21 @@ class ServeEngine:
                     need += a + c
                 if self.pager.can_allocate(need):
                     break
+                if sum(s is not None for s in self.slots) <= 1:
+                    break
                 self._preempt_slot(pick_victim(self.slots))
-                active = [i for i, s in enumerate(self.slots)
-                          if s is not None]
-                n = self._chunk_len(active, max_n)
+                decode_active = [i for i, s in enumerate(self.slots)
+                                 if s is not None and not s.prefilling]
+                if not decode_active:
+                    # the last decoder was the victim; the preemption
+                    # itself is this step's progress
+                    return True
+                n = self._chunk_len(decode_active, max_n)
         last = np.zeros((self.n_slots,), np.int32)
         gen = np.zeros((self.n_slots,), np.int32)
         budget = np.zeros((self.n_slots,), np.int32)
         stop = np.ones((self.n_slots,), bool)
-        for i in active:
+        for i in decode_active:
             r = self.slots[i]
             last[i] = r.tokens[-1]
             gen[i] = len(r.tokens)
@@ -1527,7 +1989,7 @@ class ServeEngine:
             # re-run after a decode-phase fault is a no-op (idempotent).
             cow = []
             pos_host = np.zeros((self.n_slots,), np.int32)
-            for i in active:
+            for i in decode_active:
                 r = self.slots[i]
                 pos0 = len(r.prompt) + len(r.tokens) - 1
                 pos_host[i] = pos0
@@ -1544,7 +2006,19 @@ class ServeEngine:
                 self.cache = self._copier(self.cache, src, dst)
                 self.stats.cow_copies += len(cow)
             self.cache["pos"] = jnp.asarray(pos_host)
-            self.cache["block_tables"] = jnp.asarray(self.pager.tables)
+            # the decode scan writes KV for EVERY row, every scan step
+            # (stopped rows freeze their token but not the cache write at
+            # pos). Free slots' table rows are already all-trash; a mid-
+            # prefill slot's row holds REAL blocks at index 0, which a
+            # write at pos=0 would corrupt — mask those rows to trash in
+            # the dispatched copy (the pager's own tables are untouched)
+            tables = self.pager.tables
+            if any(s is not None and s.prefilling for s in self.slots):
+                tables = tables.copy()
+                for i, s in enumerate(self.slots):
+                    if s is not None and s.prefilling:
+                        tables[i, :] = TRASH_BLOCK
+            self.cache["block_tables"] = jnp.asarray(tables)
             self.stats.blocks_in_use = self.pager.blocks_in_use
         fn = self._get_chunk_fn(n)
         if self.fault_hook is not None:
@@ -1568,7 +2042,7 @@ class ServeEngine:
         self.stats.decode_tokens += int(valid.sum())
         self.stats.occupancy_sum += float(valid.sum()) / self.n_slots
         now = self._now()
-        for i in active:
+        for i in decode_active:
             r = self.slots[i]
             got = 0
             for t in range(n):
@@ -1578,7 +2052,10 @@ class ServeEngine:
                 got += 1
             if got:
                 r.t_last = now
+            want_cancel = self._emit(r, now)
             reason = self._stop_reason(r)
+            if reason is None and want_cancel:
+                reason = "cancelled"
             if reason is not None:
                 if self.paged:
                     # publish the generated tokens' full blocks too (KV at
@@ -1621,7 +2098,8 @@ class ServeEngine:
                 self.mesh,
                 self.speculate, self.spec_k if self.speculate else None,
                 self.draft_bits if self.speculate else None,
-                self.draft_mode if self.speculate else None)
+                self.draft_mode if self.speculate else None,
+                self.prefill_budget)
         theirs = (other.cfg, other.eos_id, other.max_len, other.greedy,
                   other.n_slots, other.registry is None,
                   None if other.registry is None else other.registry.scaling,
@@ -1632,7 +2110,8 @@ class ServeEngine:
                   other.speculate,
                   other.spec_k if other.speculate else None,
                   other.draft_bits if other.speculate else None,
-                  other.draft_mode if other.speculate else None)
+                  other.draft_mode if other.speculate else None,
+                  other.prefill_budget)
         if mine != theirs:
             raise ValueError(
                 "adopt_compiled: engines differ in (cfg, eos_id, max_len, "

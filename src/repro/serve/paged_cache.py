@@ -316,6 +316,35 @@ class PagedKVCache:
             return False
         return True
 
+    def extend(self, slot: int, n_new: int) -> bool:
+        """Atomically append ``n_new`` fresh blocks to an already-seated
+        slot — all of them or none of them.
+
+        This is chunked prefill's per-chunk allocation: a partially
+        prefilled slot asks for the next chunk's blocks before any device
+        work runs. Returns False (slot table and refcounts exactly as
+        before) when the pool cannot supply the full plan, so the engine
+        defers the chunk or preempts a victim instead of crashing with a
+        half-extended table. Prefix evictions performed before a failure
+        are not undone — they only shrink the cache.
+        """
+        if n_new <= 0:
+            return True
+        start = int(self._slot_len[slot])
+        if start + n_new > self.max_blocks:
+            return False
+        taken: List[int] = []
+        try:
+            for _ in range(n_new):
+                taken.append(self.append_block(slot))
+        except RuntimeError:
+            for j in range(start + len(taken) - 1, start - 1, -1):
+                self._release_block(int(self.tables[slot, j]))
+                self.tables[slot, j] = TRASH_BLOCK
+            self._slot_len[slot] = start
+            return False
+        return True
+
     def plan_decode(self, slot: int, pos0: int, n: int) -> Tuple[int, int]:
         """Read-only twin of :meth:`prepare_decode`: how many fresh blocks
         the write window ``[pos0, pos0 + n)`` needs as ``(appends, cows)``.

@@ -209,6 +209,34 @@ def pick_victim(slots: Sequence[object],
     return best
 
 
+def prefill_chunk(remaining: int, budget: int, block_size: int) -> int:
+    """Tokens of prompt to prefill this step under a chunked-prefill budget.
+
+    A *final* chunk (everything left fits the budget) takes exactly
+    ``remaining`` tokens so the request produces its first logits this
+    step. A *non-final* chunk is floored to a whole number of KV blocks:
+    the prefill cursor then always sits on a block boundary, which keeps
+    the paged scatter whole-block and lets every completed chunk publish
+    into the radix index immediately.
+
+    >>> prefill_chunk(10, 64, 8)     # fits: take it all
+    10
+    >>> prefill_chunk(100, 64, 8)    # non-final: block-aligned floor
+    64
+    >>> prefill_chunk(100, 60, 8)
+    56
+    >>> prefill_chunk(100, 7, 8)     # budget below one block: no progress
+    0
+    >>> prefill_chunk(0, 64, 8)
+    0
+    """
+    if remaining <= 0 or budget <= 0:
+        return 0
+    if remaining <= budget:
+        return remaining
+    return (budget // block_size) * block_size
+
+
 # -- open-loop arrival processes -------------------------------------------
 
 def parse_arrival(spec: str) -> Tuple[str, float]:
